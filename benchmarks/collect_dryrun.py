@@ -1,0 +1,64 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from
+results/dryrun/*.json.
+
+  PYTHONPATH=src python -m benchmarks.collect_dryrun [--markdown]
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(mesh_suffix: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh_suffix}.json"))):
+        d = json.load(open(f))
+        base = os.path.basename(f)[: -len(".json")]
+        parts = base.split("__")
+        if len(parts) != 3:   # tagged (hillclimb) runs excluded from baseline
+            continue
+        rows.append(d)
+    return rows
+
+
+HBM_GB = 16.0  # v5e
+
+
+def fmt_row(d):
+    cell = d["cell"]
+    arch, shape, mesh = cell.split("__")[:3]
+    if d["status"] == "SKIP":
+        return f"| {arch} | {shape} | {mesh} | SKIP | — | — | — | — | — | — |"
+    if d["status"] == "FAIL":
+        return f"| {arch} | {shape} | {mesh} | FAIL | — | — | — | — | — | — |"
+    r = d["report"]
+    ms = r.get("memory_stats", {})
+    resident = (
+        ms.get("argument_size_in_bytes", 0) + ms.get("temp_size_in_bytes", 0)
+    ) / 1e9
+    fit = f"{resident:.1f}G" + ("" if resident <= HBM_GB else "!")
+    return (
+        f"| {arch} | {shape} | {mesh} | {r['dominant']} "
+        f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+        f"| {r['collective_s']*1e3:.1f} | {r['useful_flop_ratio']:.2f} "
+        f"| {r['roofline_fraction']:.4f} "
+        f"| {fit} |"
+    )
+
+
+def main():
+    print("| arch | shape | mesh | dominant | compute ms | memory ms | "
+          "collective ms | 6ND/HLO | roofline frac | dev mem |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for mesh in ("pod1", "pod2"):
+        for d in load(mesh):
+            print(fmt_row(d))
+
+
+if __name__ == "__main__":
+    main()

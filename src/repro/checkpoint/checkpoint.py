@@ -1,0 +1,146 @@
+"""Atomic sharded checkpointing with cross-mesh resharding.
+
+Layout:  <dir>/step_<N>/
+           manifest.json      {leaf path -> {file, shape, dtype, spec}}
+           <leaf>.npy.zst     zstd-compressed raw array bytes
+         <dir>/LATEST         (atomic pointer, written last)
+
+Restore accepts a *different* mesh / sharding than the save: arrays are
+loaded on host and ``jax.device_put`` re-shards them — this is the elastic
+restart path (RailX Algorithm-2 reallocation after failures changes the
+mesh; training resumes on the surviving sub-grid).
+
+Single-process implementation (the container); the layout is per-leaf so a
+multi-host version writes disjoint shard files per host — noted in
+DESIGN.md as the production extension point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    import zstandard as zstd
+except Exception:  # pragma: no cover
+    zstd = None
+
+
+def _leaf_paths(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict[str, Any]] = None) -> str:
+    """Atomic: write into a temp dir, fsync, rename, then update LATEST."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    manifest: Dict[str, Any] = {"step": step, "leaves": {}, "extra": extra or {}}
+    comp = zstd.ZstdCompressor(level=3) if zstd else None
+    for key, leaf in _leaf_paths(tree).items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace("/", "__") + ".npy" + (".zst" if comp else "")
+        fpath = os.path.join(tmp, fname)
+        import io
+
+        buf = io.BytesIO()
+        np.save(buf, arr, allow_pickle=False)
+        data = buf.getvalue()
+        if comp:
+            data = comp.compress(data)
+        with open(fpath, "wb") as f:
+            f.write(data)
+        manifest["leaves"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(os.path.join(ckpt_dir, ".LATEST.tmp"), "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(os.path.join(ckpt_dir, ".LATEST.tmp"), os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    return int(name.split("_")[-1])
+
+
+def restore(
+    ckpt_dir: str,
+    tree_like,
+    step: Optional[int] = None,
+    shardings=None,
+) -> Tuple[Any, Dict[str, Any]]:
+    """Load into the structure of ``tree_like``; ``shardings`` (same pytree
+    shape, NamedSharding leaves) re-shards onto the current mesh."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    dec = zstd.ZstdDecompressor() if zstd else None
+    leaves = {}
+    for key, meta in manifest["leaves"].items():
+        fpath = os.path.join(d, meta["file"])
+        with open(fpath, "rb") as f:
+            data = f.read()
+        if meta["file"].endswith(".zst"):
+            data = dec.decompress(data)
+        import io
+
+        leaves[key] = np.load(io.BytesIO(data), allow_pickle=False)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda x: hasattr(x, "spec")
+        )[0]
+    out = []
+    for i, (path, like) in enumerate(flat):
+        key = "/".join(_path_str(p) for p in path)
+        if key not in leaves:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = leaves[key]
+        if list(arr.shape) != list(like.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != expected {like.shape}")
+        if shard_flat is not None:
+            out.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["extra"]

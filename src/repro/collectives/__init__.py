@@ -1,0 +1,24 @@
+"""Executable RailX collective schedules + gradient compression."""
+
+from .schedules import (  # noqa: F401
+    all_gather_axis,
+    all_reduce_axis,
+    all_to_all_axis,
+    flat_all_reduce,
+    hierarchical_all_gather,
+    hierarchical_all_reduce,
+    hierarchical_reduce_scatter,
+    make_all_reduce_fn,
+    reduce_scatter_axis,
+    ring_all_reduce_2d,
+    tree_flat_all_reduce,
+    tree_hierarchical_all_reduce,
+)
+from .compression import (  # noqa: F401
+    ErrorFeedback,
+    Int8Compressed,
+    compressed_hierarchical_all_reduce,
+    ef_compress,
+    int8_compress,
+    int8_decompress,
+)

@@ -1,0 +1,11 @@
+"""Architecture configs (one module per assigned arch) + registry."""
+
+from .base import SHAPES, ModelConfig, MoEParams, RunConfig, ShapeConfig  # noqa: F401
+from .registry import (  # noqa: F401
+    ALL_CONFIGS,
+    ARCHS,
+    get_config,
+    get_smoke_config,
+    supports_decode,
+    supports_long_context,
+)

@@ -1,0 +1,13 @@
+"""RailX core: the paper's contributions as composable modules.
+
+hamiltonian   - rail-ring all-to-all decomposition (Lemma 3.1, SA.1)
+topology      - physical architecture + Torus/HyperX/Dragonfly/dim-splitting
+routing       - minimal + non-minimal adaptive routing, VC discipline
+analytical    - communication-time models (Eqs. 2-13)
+cost          - Tables 3/6 cost model
+availability  - Algorithm 2 + MLaaS allocation (S6.6, SA.5)
+mapping       - 5D parallelism mapping + bandwidth allocation (S5, Table 4)
+simulator     - flow-level network simulator (Fig. 14/15)
+"""
+
+from . import analytical, availability, cost, hamiltonian, mapping, routing, simulator, topology  # noqa: F401

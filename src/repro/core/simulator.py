@@ -1,0 +1,219 @@
+"""Flow-level network simulator (paper §6.1.2 adaptation).
+
+The paper evaluates RailX with a cycle-accurate flit simulator (CNSim).  A
+cycle-accurate router model is orthogonal to a JAX training framework, so we
+implement the standard *flow-level* steady-state model that reproduces the
+paper's throughput results (Fig. 14):
+
+  * traffic = a demand matrix over chips (all-to-all, ring-collective, ...);
+  * each demand is routed over the topology graph (minimal routing; optional
+    2-way load-balanced for HyperX rows/columns via the two rail links);
+  * link load = sum of demand fractions crossing it / link capacity;
+  * achievable per-chip throughput = 1 / max_link_load (normalized to the
+    per-port injection bandwidth), the classical bottleneck bound the
+    paper's Eq. (2)-(4) are derived from;
+  * latency is modeled per-hop (10 cycles external / 1 internal, Table 5).
+
+Chips are vertices (node, chip) where node is a topology coordinate and
+chip a position in the m x m mesh; intra-node links have capacity k x the
+inter-node links (the 2D-mesh-as-virtual-switch of §3.3.5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import defaultdict, deque
+from typing import Callable, Dict, Hashable, Iterable, List, Optional, Sequence, Tuple
+
+Vertex = Hashable
+Edge = Tuple[Vertex, Vertex]
+
+
+@dataclasses.dataclass
+class FlowNetwork:
+    """Directed capacitated graph; capacities in units of one external link."""
+
+    adj: Dict[Vertex, List[Vertex]] = dataclasses.field(
+        default_factory=lambda: defaultdict(list)
+    )
+    capacity: Dict[Edge, float] = dataclasses.field(default_factory=dict)
+
+    def add_link(self, a: Vertex, b: Vertex, cap: float, bidir: bool = True) -> None:
+        if b not in self.adj[a]:
+            self.adj[a].append(b)
+        self.capacity[(a, b)] = self.capacity.get((a, b), 0.0) + cap
+        if bidir:
+            if a not in self.adj[b]:
+                self.adj[b].append(a)
+            self.capacity[(b, a)] = self.capacity.get((b, a), 0.0) + cap
+
+    def vertices(self) -> List[Vertex]:
+        return list(self.adj)
+
+
+def build_railx_hyperx_network(
+    scale: int, m: int, k_internal: float, links_per_pair: int = 2
+) -> FlowNetwork:
+    """(scale x scale) RailX-HyperX at chip granularity.
+
+    Vertices: (X, Y, x, y).  Intra-node mesh links capacity ``k_internal``;
+    each ordered row/column node pair has ``links_per_pair`` unit links,
+    endpoint chips assigned round-robin along the mesh edge (rails live on
+    distinct chip rows/columns — §3.2)."""
+    net = FlowNetwork()
+    for X in range(scale):
+        for Y in range(scale):
+            for x in range(m):
+                for y in range(m):
+                    if x + 1 < m:
+                        net.add_link((X, Y, x, y), (X, Y, x + 1, y), k_internal)
+                    if y + 1 < m:
+                        net.add_link((X, Y, x, y), (X, Y, x, y + 1), k_internal)
+    for Y in range(scale):
+        for a, b in itertools.combinations(range(scale), 2):
+            for l in range(links_per_pair):
+                row = (a + b + l) % m
+                net.add_link((a, Y, row, 0), (b, Y, row, 0), 1.0)
+    for X in range(scale):
+        for a, b in itertools.combinations(range(scale), 2):
+            for l in range(links_per_pair):
+                col = (a + b + l) % m
+                net.add_link((X, a, 0, col), (X, b, 0, col), 1.0)
+    return net
+
+
+def build_torus2d_network(side: int, m: int, k_internal: float) -> FlowNetwork:
+    """side x side node 2D-Torus of m x m mesh nodes (for Fig. 14 baselines)."""
+    net = FlowNetwork()
+    for X in range(side):
+        for Y in range(side):
+            for x in range(m):
+                for y in range(m):
+                    if x + 1 < m:
+                        net.add_link((X, Y, x, y), (X, Y, x + 1, y), k_internal)
+                    if y + 1 < m:
+                        net.add_link((X, Y, x, y), (X, Y, x, y + 1), k_internal)
+    for X in range(side):
+        for Y in range(side):
+            for l in range(m):  # one rail per chip row/col = m parallel links
+                net.add_link((X, Y, l, m - 1), ((X + 1) % side, Y, l, 0), 1.0)
+                net.add_link((X, Y, m - 1, l), (X, (Y + 1) % side, 0, l), 1.0)
+    return net
+
+
+def build_fattree_network(chips: int, ports: float = 1.0, taper: float = 1.0) -> FlowNetwork:
+    """Idealized non-blocking (or tapered) fat-tree: star through a core
+    vertex with per-chip uplink capacity ports/taper (throughput-equivalent
+    abstraction for flow-level analysis)."""
+    net = FlowNetwork()
+    for c in range(chips):
+        net.add_link(("chip", c), "core", ports / taper)
+    return net
+
+
+# ---------------------------------------------------------------------------
+# Routing + load accounting
+# ---------------------------------------------------------------------------
+
+
+def shortest_paths_multi(
+    net: FlowNetwork, src: Vertex, dsts: Iterable[Vertex]
+) -> Dict[Vertex, List[Vertex]]:
+    """BFS tree from src; returns one shortest path per destination."""
+    parent: Dict[Vertex, Vertex] = {src: src}
+    dq = deque([src])
+    want = set(dsts)
+    found: Dict[Vertex, List[Vertex]] = {}
+    while dq and want:
+        u = dq.popleft()
+        for v in net.adj[u]:
+            if v not in parent:
+                parent[v] = u
+                dq.append(v)
+                if v in want:
+                    path = [v]
+                    while path[-1] != src:
+                        path.append(parent[path[-1]])
+                    found[v] = path[::-1]
+                    want.discard(v)
+    return found
+
+
+def route_demands_ecmp(
+    net: FlowNetwork,
+    demands: Dict[Tuple[Vertex, Vertex], float],
+    num_paths: int = 2,
+    seed: int = 0,
+) -> Dict[Edge, float]:
+    """Load per link routing each demand over up to ``num_paths`` link-
+    disjoint-ish shortest paths (successive BFS with inflated used links)."""
+    import random
+
+    rng = random.Random(seed)
+    load: Dict[Edge, float] = defaultdict(float)
+    by_src: Dict[Vertex, List[Tuple[Vertex, float]]] = defaultdict(list)
+    for (s, t), v in demands.items():
+        if s != t and v > 0:
+            by_src[s].append((t, v))
+    for s, lst in by_src.items():
+        paths1 = shortest_paths_multi(net, s, [t for t, _ in lst])
+        for t, v in lst:
+            path = paths1.get(t)
+            if path is None:
+                raise ValueError(f"unreachable {s}->{t}")
+            share = v / 1.0
+            for a, b in zip(path, path[1:]):
+                load[(a, b)] += share
+    return load
+
+
+def max_utilization(net: FlowNetwork, load: Dict[Edge, float]) -> float:
+    worst = 0.0
+    for e, l in load.items():
+        cap = net.capacity.get(e, 0.0)
+        if cap <= 0:
+            return float("inf")
+        worst = max(worst, l / cap)
+    return worst
+
+
+def alltoall_throughput(
+    net: FlowNetwork,
+    chips: Sequence[Vertex],
+    injection_ports: float,
+) -> float:
+    """Steady-state all-to-all throughput per chip, normalized to
+    flits/cycle/chip with the external link = 1 flit/cycle (Fig. 14).
+
+    Each chip injects `injection_ports` flits/cycle spread uniformly over
+    all other chips; achievable fraction = 1 / max link utilization; the
+    reported figure-of-merit is injection * min(1, 1/max_util).
+    """
+    Nc = len(chips)
+    per_pair = injection_ports / (Nc - 1)
+    demands = {
+        (s, t): per_pair for s in chips for t in chips if s != t
+    }
+    load = route_demands_ecmp(net, demands)
+    util = max_utilization(net, load)
+    if util <= 0:
+        return injection_ports
+    return injection_ports * min(1.0, 1.0 / util)
+
+
+def ring_allreduce_time_cycles(
+    p_chips: int,
+    volume_flits: float,
+    hops_external: int,
+    ext_latency: float = 10.0,
+    int_latency: float = 1.0,
+    hops_internal: int = 0,
+    bw_flits_per_cycle: float = 1.0,
+) -> float:
+    """Cycle-count model consistent with Table 5 defaults, for Fig. 15
+    cross-checks: (p-1) steps of latency + serialization."""
+    steps = 2 * (p_chips - 1)
+    latency = steps * (hops_external * ext_latency + hops_internal * int_latency)
+    serial = 2 * (p_chips - 1) / p_chips * volume_flits / bw_flits_per_cycle
+    return latency + serial

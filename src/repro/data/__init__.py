@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticLM, optimal_nll  # noqa: F401

@@ -1,0 +1,37 @@
+"""jit'd wrapper for the chunkwise mLSTM kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .mlstm import mlstm_fwd
+from .ref import mlstm_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _mlstm(q, k, v, i_gate, logf, chunk):
+    return mlstm_fwd(q, k, v, i_gate, logf, chunk=chunk, interpret=_on_cpu())
+
+
+def _f(q, k, v, i_gate, logf, chunk):
+    return _mlstm(q, k, v, i_gate, logf, chunk), (q, k, v, i_gate, logf)
+
+
+def _b(chunk, res, g):
+    q, k, v, i_gate, logf = res
+    _, vjp = jax.vjp(lambda *a: mlstm_ref(*a), q, k, v, i_gate, logf)
+    return vjp(g)
+
+
+_mlstm.defvjp(_f, _b)
+
+
+def mlstm(q, k, v, i_gate, logf, chunk: int = 64):
+    """q,k,v (B,S,H,D) [q pre-scaled]; i_gate,logf (B,S,H) -> (B,S,H,D)."""
+    return _mlstm(q, k, v, i_gate, logf, chunk)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the chunkwise mLSTM kernel: sequential stabilized
+recurrence (xLSTM eqs. with matrix memory C, normalizer n, stabilizer m)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(
+    q: jax.Array,      # (B, S, H, D) pre-scaled
+    k: jax.Array,      # (B, S, H, D)
+    v: jax.Array,      # (B, S, H, D)
+    i_gate: jax.Array, # (B, S, H)
+    logf: jax.Array,   # (B, S, H) log-sigmoid forget
+) -> jax.Array:
+    B, S, H, D = q.shape
+
+    def step(carry, t):
+        C, n, m = carry
+        qt, kt, vt = q[:, t], k[:, t], v[:, t]
+        it, lf = i_gate[:, t], logf[:, t]
+        m_new = jnp.maximum(lf + m, it)
+        fdec = jnp.exp(lf + m - m_new)
+        iamp = jnp.exp(it - m_new)
+        C = C * fdec[..., None, None] + iamp[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :]
+        )
+        n = n * fdec[..., None] + iamp[..., None] * kt
+        qn = jnp.einsum("bhd,bhd->bh", qt, n)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+        y = jnp.einsum("bhd,bhde->bhe", qt, C) / denom[..., None]
+        return (C, n, m_new), y
+
+    carry = (
+        jnp.zeros((B, H, D, D), jnp.float32),
+        jnp.zeros((B, H, D), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, carry, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,38 @@
+"""jit'd wrapper for the SSD kernel (forward; bwd differentiates the ref)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ssd_ref
+from .ssd import ssd_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _ssd(x, dt, Bm, Cm, A, chunk):
+    return ssd_fwd(x, dt, Bm, Cm, A, chunk=chunk, interpret=_on_cpu())
+
+
+def _ssd_f(x, dt, Bm, Cm, A, chunk):
+    return _ssd(x, dt, Bm, Cm, A, chunk), (x, dt, Bm, Cm, A)
+
+
+def _ssd_b(chunk, res, g):
+    x, dt, Bm, Cm, A = res
+    _, vjp = jax.vjp(lambda *a: ssd_ref(*a), x, dt, Bm, Cm, A)
+    return vjp(g)
+
+
+_ssd.defvjp(_ssd_f, _ssd_b)
+
+
+def ssd(x, dt, Bm, Cm, A, chunk: int = 64):
+    """x (B,S,H,P), dt (B,S,H), Bm/Cm (B,S,N), A (H,) -> y (B,S,H,P)."""
+    return _ssd(x, dt, Bm, Cm, A, chunk)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the Mamba2 SSD kernel: sequential state-space scan.
+
+y_t = C_t . h_t,   h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t
+(per head; h (P, N); A scalar per head, negative).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jax.Array,      # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H) post-softplus
+    Bm: jax.Array,     # (B, S, N)
+    Cm: jax.Array,     # (B, S, N)
+    A: jax.Array,      # (H,) negative decay rates
+) -> jax.Array:
+    b, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, t):
+        dA = jnp.exp(dt[:, t] * A[None, :])                       # (B,H)
+        inject = jnp.einsum("bn,bhp,bh->bhpn", Bm[:, t], x[:, t], dt[:, t])
+        h = h * dA[:, :, None, None] + inject
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, t], h)
+        return h, y
+
+    h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1)                                  # (B,S,H,P)

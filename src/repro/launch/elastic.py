@@ -1,0 +1,75 @@
+"""Elastic restart drill: RailX failure workaround -> reallocation -> resume.
+
+The production story (DESIGN.md §Fault tolerance):
+  1. a node fails; its row+column leave the single-job allocation;
+  2. ``core.availability.max_single_allocation`` (paper Algorithm 2) finds
+     the largest healthy sub-grid;
+  3. the launcher rebuilds the jax mesh over the surviving allocation and
+     restores the latest checkpoint with resharding.
+
+``plan_recovery`` implements steps 1-2 and emits the new mesh signature;
+``examples/fault_tolerant_training.py`` drives the full drill (train ->
+kill -> recover on a smaller mesh -> losses continue downward).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from ..core.availability import JobAllocation, max_single_allocation
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPlan:
+    healthy_nodes: int
+    grid_side_rows: int
+    grid_side_cols: int
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+    lost_fraction: float
+
+
+def _best_rect(n: int, faults: Sequence[Tuple[int, int]]) -> Tuple[int, int]:
+    """Rows x cols of the maximal healthy allocation (re-derives the
+    argmax of Algorithm 2)."""
+    best = (0, 0)
+    import itertools
+
+    faults = list(dict.fromkeys(faults))
+    if not faults:
+        return (n, n)
+    for bits in itertools.product((0, 1), repeat=len(faults)):
+        rows = {f[0] for f, b in zip(faults, bits) if b == 0}
+        cols = {f[1] for f, b in zip(faults, bits) if b == 1}
+        r, c = n - len(rows), n - len(cols)
+        if r * c > best[0] * best[1]:
+            best = (r, c)
+    return best
+
+
+def plan_recovery(
+    grid_side: int,
+    failed_nodes: Sequence[Tuple[int, int]],
+    chips_per_node: int = 16,
+    model_axis: int = 16,
+) -> RecoveryPlan:
+    """Allocate the surviving sub-grid and emit a (data, model) mesh.
+
+    The model axis (intra-node 2D-mesh) is unaffected by node-level
+    failures; the data axis shrinks to the surviving node count of the
+    maximal rectangle.
+    """
+    size = max_single_allocation(grid_side, list(failed_nodes))
+    rows, cols = _best_rect(grid_side, failed_nodes)
+    assert rows * cols == size, (rows, cols, size)
+    data = rows * cols
+    total = grid_side * grid_side
+    return RecoveryPlan(
+        healthy_nodes=size,
+        grid_side_rows=rows,
+        grid_side_cols=cols,
+        mesh_shape=(data, model_axis),
+        mesh_axes=("data", "model"),
+        lost_fraction=1.0 - size / total,
+    )

@@ -1,0 +1,2 @@
+from . import common, hybrid, moe, model_zoo, ssm, transformer, whisper, xlstm_lm  # noqa: F401
+from .model_zoo import get_model  # noqa: F401

@@ -1,0 +1,251 @@
+"""Zamba2-style hybrid: Mamba2 backbone + *shared* attention block
+[arXiv:2411.15242].
+
+Structure (zamba2-7b config): 81 mamba2 layers; after every 6th layer one
+shared transformer block (attention + SwiGLU) is invoked with
+concat(hidden, initial_embedding) -> down-projection input (the Zamba
+"shared block with concatenated skip"); the shared block's *weights* are
+reused across its 13 invocations but each invocation has its own KV cache.
+
+Execution: outer scan over 13 groups x (inner scan over 6 mamba layers +
+shared block), plus an unrolled tail of 81 - 78 = 3 mamba layers.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import common as C
+from .common import DTypes, Params
+from .ssm import Mamba2Config, init_mamba2, mamba2, mamba2_init_state, mamba2_specs
+
+
+def _dt(cfg: ModelConfig) -> DTypes:
+    return DTypes(param=cfg.param_dtype, compute=cfg.compute_dtype)
+
+
+def _mcfg(cfg: ModelConfig) -> Mamba2Config:
+    return Mamba2Config(
+        d_model=cfg.d_model,
+        d_state=cfg.ssm_state,
+        head_dim=cfg.mamba_head_dim,
+    )
+
+
+def _attn_cfg(cfg: ModelConfig) -> C.AttnConfig:
+    return C.AttnConfig(
+        d_model=cfg.d_model,
+        heads=cfg.heads,
+        kv_heads=cfg.kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        causal=True,
+        rope_theta=cfg.rope_theta,
+    )
+
+
+def _group_sizes(cfg: ModelConfig) -> Tuple[int, int]:
+    g = cfg.shared_attn_every
+    groups = cfg.num_layers // g
+    tail = cfg.num_layers - groups * g
+    return groups, tail
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    dt = _dt(cfg)
+    mcfg = _mcfg(cfg)
+    groups, tail = _group_sizes(cfg)
+    g = cfg.shared_attn_every
+
+    def mamba_layer(k):
+        return {"ln": C.init_rmsnorm(cfg.d_model, dt), "mix": init_mamba2(k, mcfg, dt)}
+
+    grouped = C.stack_params(ks[0], groups * g, mamba_layer)
+    # reshape leading dim (groups*g, ...) -> (groups, g, ...)
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape((groups, g) + a.shape[1:]), grouped
+    )
+    p: Params = {
+        "embed": C.init_embedding(ks[1], cfg.vocab, cfg.d_model, dt),
+        "groups": grouped,
+        "tail": C.stack_params(ks[2], tail, mamba_layer) if tail else {},
+        "shared": {
+            "in_proj": C.init_linear(ks[3], 2 * cfg.d_model, cfg.d_model, dt),
+            "ln1": C.init_rmsnorm(cfg.d_model, dt),
+            "attn": C.init_attention(ks[4], _attn_cfg(cfg), dt),
+            "ln2": C.init_rmsnorm(cfg.d_model, dt),
+            "ffn": C.init_swiglu(ks[5], cfg.d_model, cfg.d_ff, dt),
+        },
+        "final_norm": C.init_rmsnorm(cfg.d_model, dt),
+    }
+    return p
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    mcfg = _mcfg(cfg)
+    groups, tail = _group_sizes(cfg)
+    layer = {"ln": C.rmsnorm_specs(), "mix": mamba2_specs(mcfg)}
+    grouped = jax.tree_util.tree_map(
+        lambda axes: ("stack", "stack") + tuple(axes),
+        layer,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(n, (str, type(None))) for n in x),
+    )
+    p: Params = {
+        "embed": C.embedding_specs(),
+        "groups": grouped,
+        "tail": C.stacked_specs(layer) if tail else {},
+        "shared": {
+            "in_proj": C.linear_specs(("fsdp", "embed")),
+            "ln1": C.rmsnorm_specs(),
+            "attn": C.attention_specs(_attn_cfg(cfg)),
+            "ln2": C.rmsnorm_specs(),
+            "ffn": C.swiglu_specs(),
+        },
+        "final_norm": C.rmsnorm_specs(),
+    }
+    return p
+
+
+def _shared_block(
+    sp: Params, cfg: ModelConfig, x: jax.Array, x0: jax.Array,
+    positions: jax.Array, dt: DTypes,
+    kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    index: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    h = C.linear(sp["in_proj"], jnp.concatenate([x, x0], axis=-1), dt)
+    a_in = C.rmsnorm(sp["ln1"], h)
+    attn_out, new_kv = C.attention(
+        sp["attn"], _attn_cfg(cfg), a_in, positions, dt,
+        kv_cache=kv, cache_index=index,
+    )
+    h = h + attn_out
+    f_in = C.rmsnorm(sp["ln2"], h)
+    h = h + C.swiglu(sp["ffn"], f_in, dt)
+    return x + h, new_kv
+
+
+def forward(
+    params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+) -> Tuple[jax.Array, jax.Array]:
+    dt = _dt(cfg)
+    mcfg = _mcfg(cfg)
+    x = C.embed(params["embed"], batch["tokens"], dt)
+    x0 = x
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    groups, tail = _group_sizes(cfg)
+
+    def mamba_step(x, lp):
+        h = C.rmsnorm(lp["ln"], x)
+        out, _ = mamba2(lp["mix"], mcfg, h, dt)
+        return x + out, None
+
+    def group_body(x, gp):
+        x, _ = jax.lax.scan(mamba_step, x, gp)
+        x, _ = _shared_block(params["shared"], cfg, x, x0, positions, dt)
+        return x, None
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = jax.lax.scan(body, x, params["groups"])
+    if tail:
+        x, _ = jax.lax.scan(mamba_step, x, params["tail"])
+    x = C.rmsnorm(params["final_norm"], x)
+    logits = C.unembed(params["embed"], x, dt)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Dict[str, Any]:
+    mcfg = _mcfg(cfg)
+    groups, tail = _group_sizes(cfg)
+    g = cfg.shared_attn_every
+    ms = mamba2_init_state(mcfg, batch, cfg.compute_dtype)
+    stack = lambda t, n: jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), t
+    )
+    Hk, Dh = cfg.kv_heads, cfg.resolved_head_dim
+    return {
+        "mamba": jax.tree_util.tree_map(
+            lambda a: a.reshape((groups, g) + a.shape[1:]),
+            stack(ms, groups * g),
+        ),
+        "tail": stack(ms, tail) if tail else {},
+        "attn_k": jnp.zeros((groups, batch, cache_len, Hk, Dh), cfg.compute_dtype),
+        "attn_v": jnp.zeros((groups, batch, cache_len, Hk, Dh), cfg.compute_dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    mamba_leaf = {
+        "conv": ("stack", "stack", "batch", None, "mlp"),
+        "ssm": ("stack", "stack", "batch", None, None, None),
+    }
+    groups, tail = _group_sizes(cfg)
+    return {
+        "mamba": mamba_leaf,
+        "tail": {
+            "conv": ("stack", "batch", None, "mlp"),
+            "ssm": ("stack", "batch", None, None, None),
+        }
+        if tail
+        else {},
+        "attn_k": ("stack", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "attn_v": ("stack", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "index": (),
+    }
+
+
+def decode_step(
+    params: Params, cfg: ModelConfig, cache: Dict[str, Any],
+    batch: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    dt = _dt(cfg)
+    mcfg = _mcfg(cfg)
+    x = C.embed(params["embed"], batch["tokens"], dt)
+    x0 = x
+    B, S, _ = x.shape
+    index = cache["index"]
+    positions = jnp.broadcast_to(index + jnp.arange(S)[None], (B, S))
+    groups, tail = _group_sizes(cfg)
+
+    def mamba_step(x, xs):
+        lp, st = xs
+        h = C.rmsnorm(lp["ln"], x)
+        out, nst = mamba2(lp["mix"], mcfg, h, dt, state=st)
+        return x + out, nst
+
+    def group_body(x, xs):
+        gp, gst, ck, cv = xs
+        x, nst = jax.lax.scan(mamba_step, x, (gp, gst))
+        x, nkv = _shared_block(
+            params["shared"], cfg, x, x0, positions, dt, kv=(ck, cv), index=index
+        )
+        return x, (nst, nkv[0], nkv[1])
+
+    x, (nmamba, nks, nvs) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], cache["mamba"], cache["attn_k"], cache["attn_v"]),
+    )
+    new_tail = cache["tail"]
+    if tail:
+        x, new_tail = jax.lax.scan(mamba_step, x, (params["tail"], cache["tail"]))
+    x = C.rmsnorm(params["final_norm"], x)
+    logits = C.unembed(params["embed"], x, dt)
+    new_cache = {
+        "mamba": nmamba,
+        "tail": new_tail,
+        "attn_k": nks,
+        "attn_v": nvs,
+        "index": index + S,
+    }
+    return logits, new_cache

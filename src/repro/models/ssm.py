@@ -1,0 +1,488 @@
+"""State-space & recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM/sLSTM).
+
+Mamba2 [arXiv:2405.21060] is implemented in the chunked SSD form (matmul-
+rich: intra-chunk quadratic + inter-chunk state recurrence) so it maps onto
+the MXU; the Pallas kernel in kernels/ssd mirrors the same chunking.  A
+single-token ``step`` form serves decode (O(1) state).
+
+xLSTM [arXiv:2405.04517]: mLSTM has matrix memory C (H, Dk, Dv) with
+exponential input/forget gates — chunkwise-parallel like SSD; sLSTM is a
+scalar-memory sequential recurrence (lax.scan over time).
+
+All shapes batch-first: x (B, S, D).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard_hint
+from .common import (
+    DTypes,
+    Params,
+    init_linear,
+    init_rmsnorm,
+    linear,
+    linear_specs,
+    rmsnorm,
+    rmsnorm_specs,
+    trunc_normal,
+)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 64
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_mamba2(key, cfg: Mamba2Config, dt: DTypes) -> Params:
+    ks = jax.random.split(key, 6)
+    D, Din, N, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    # in_proj -> [z (Din), x (Din), B (N), C (N), dt (H)]
+    d_in_proj = 2 * Din + 2 * N + H
+    p: Params = {
+        "in_proj": init_linear(ks[0], D, d_in_proj, dt),
+        "conv_w": trunc_normal(ks[1], (cfg.d_conv, Din + 2 * N), 0.5, dt.param),
+        "conv_b": jnp.zeros((Din + 2 * N,), dt.param),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dt.param),
+        "D": jnp.ones((H,), dt.param),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, H))).astype(dt.param),
+        "norm": init_rmsnorm(Din, dt),
+        "out_proj": init_linear(ks[2], Din, D, dt),
+    }
+    return p
+
+
+def mamba2_specs(cfg: Mamba2Config) -> Params:
+    return {
+        "in_proj": linear_specs(("fsdp", "mlp")),
+        "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": rmsnorm_specs(),
+        "out_proj": linear_specs(("mlp", "fsdp")),
+    }
+
+
+def _ssd_chunked(
+    xh: jax.Array, dtg: jax.Array, B: jax.Array, C: jax.Array, A: jax.Array,
+    chunk: int, init_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan (chunked, matmul form).
+
+    xh:(b,S,H,P) dtg:(b,S,H) B,C:(b,S,N) A:(H,) negative decay rates.
+    Returns (y (b,S,H,P), final_state (b,H,P,N)).
+    """
+    b, S, H, Pd = xh.shape
+    N = B.shape[-1]
+    nc = S // chunk
+    xc = xh.reshape(b, nc, chunk, H, Pd)
+    dc = dtg.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, N)
+    Cc = C.reshape(b, nc, chunk, N)
+    dA = dc * A[None, None, None, :]                    # (b,nc,c,H) negative
+    cum = jnp.cumsum(dA, axis=2)                        # within-chunk cumsum
+    # intra-chunk (causal) part: y_intra[t] = sum_{s<=t} exp(cum t - cum s) ...
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,t,s,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bztn,bzsn->bzts", Cc, Bc)           # (b,nc,t,s)
+    M = CB[..., None] * L                                # (b,nc,t,s,H)
+    xdt = xc * dc[..., None]                             # (b,nc,s,H,P) x*dt
+    y_intra = jnp.einsum("bztsh,bzshp->bzthp", M, xdt)
+    # chunk states: state_z = sum_s exp(cumend - cum s) * B_s x_s dt_s
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (b,nc,c,H)
+    state_contrib = jnp.einsum(
+        "bzsn,bzshp,bzsh->bzhpn", Bc, xdt, decay_to_end
+    )                                                    # (b,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (b,nc,H) total decay
+    # inter-chunk recurrence over nc chunks
+    def scan_fn(state, inp):
+        contrib, decay = inp                             # (b,H,P,N), (b,H)
+        new = state * decay[:, :, None, None] + contrib
+        return new, state                                # emit state BEFORE chunk
+
+    init = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((b, H, Pd, N), xh.dtype)
+    )
+    final_state, states_before = jax.lax.scan(
+        scan_fn,
+        init,
+        (
+            jnp.moveaxis(state_contrib, 1, 0),
+            jnp.moveaxis(chunk_decay, 1, 0),
+        ),
+    )
+    states_before = jnp.moveaxis(states_before, 0, 1)    # (b,nc,H,P,N)
+    # inter-chunk contribution: y_inter[t] = C_t . (decay(0..t) * state_in)
+    decay_from_start = jnp.exp(cum)                      # (b,nc,c,H)
+    y_inter = jnp.einsum(
+        "bztn,bzhpn,bzth->bzthp", Cc, states_before, decay_from_start
+    )
+    y = (y_intra + y_inter).reshape(b, S, H, Pd)
+    return y, final_state
+
+
+def mamba2(
+    p: Params, cfg: Mamba2Config, x: jax.Array, dt: DTypes,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full Mamba2 block.  ``state`` (decode): {"conv": (B, d_conv-1, Dc),
+    "ssm": (B, H, P, N)}; seq dim of x must be 1 in decode mode."""
+    Bsz, S, D = x.shape
+    Din, N, H, Pd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    zxbcdt = linear(p["in_proj"], x, dt)
+    z, xr, Bc, Cc, dtg = jnp.split(
+        zxbcdt, [Din, 2 * Din, 2 * Din + N, 2 * Din + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xr, Bc, Cc], axis=-1)     # (B,S,Din+2N)
+    w = dt.c(p["conv_w"])                                # (K, Dc)
+    K = w.shape[0]
+    if state is not None:
+        hist = jnp.concatenate([state["conv"], conv_in], axis=1)  # (B,K-1+S,Dc)
+        new_conv = hist[:, -(K - 1):, :]
+        conv_out = jnp.einsum(
+            "bkc,kc->bc", hist[:, -K:, :], w
+        )[:, None, :] + p["conv_b"].astype(x.dtype)
+    else:
+        pad = jnp.zeros((Bsz, K - 1, conv_in.shape[-1]), conv_in.dtype)
+        padded = jnp.concatenate([pad, conv_in], axis=1)
+        conv_out = (
+            sum(
+                padded[:, i : i + S, :] * w[i][None, None, :]
+                for i in range(K)
+            )
+            + p["conv_b"].astype(x.dtype)
+        )
+        new_conv = padded[:, -(K - 1):, :] if S >= K - 1 else None
+    conv_out = jax.nn.silu(conv_out)
+    xr, Bc, Cc = jnp.split(conv_out, [Din, Din + N], axis=-1)
+    xh = xr.reshape(Bsz, -1, H, Pd)
+    dtg_sp = jax.nn.softplus(
+        dtg.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (H,) negative
+    if state is not None:
+        # single-step recurrence
+        dA = jnp.exp(dtg_sp[:, 0] * A[None, :])           # (B,H)
+        Bx = jnp.einsum(
+            "bn,bhp,bh->bhpn", Bc[:, 0].astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32), dtg_sp[:, 0]
+        )
+        new_ssm = state["ssm"] * dA[:, :, None, None] + Bx
+        y = jnp.einsum("bn,bhpn->bhp", Cc[:, 0].astype(jnp.float32), new_ssm)
+        y = y[:, None].astype(x.dtype)
+        new_state = {"conv": new_conv, "ssm": new_ssm}
+    else:
+        Slen = xh.shape[1]
+        chunk = min(cfg.chunk, Slen)
+        if Slen % chunk:
+            padlen = (-Slen) % chunk
+            xh = jnp.pad(xh, ((0, 0), (0, padlen), (0, 0), (0, 0)))
+            dtg_sp = jnp.pad(dtg_sp, ((0, 0), (0, padlen), (0, 0)))
+            Bc = jnp.pad(Bc, ((0, 0), (0, padlen), (0, 0)))
+            Cc = jnp.pad(Cc, ((0, 0), (0, padlen), (0, 0)))
+        y, _ = _ssd_chunked(
+            xh.astype(jnp.float32), dtg_sp,
+            Bc.astype(jnp.float32), Cc.astype(jnp.float32), A, chunk,
+        )
+        y = y[:, :S].astype(x.dtype)
+        new_state = None
+    y = y + xh[:, :S].astype(x.dtype) * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, Din)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    return linear(p["out_proj"], y, dt), new_state
+
+
+def mamba2_init_state(cfg: Mamba2Config, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros(
+            (batch, cfg.d_conv - 1, cfg.d_inner + 2 * cfg.d_state), dtype
+        ),
+        "ssm": jnp.zeros(
+            (batch, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (chunkwise) + sLSTM (sequential)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    heads: int = 4
+    chunk: int = 64
+    conv_kernel: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.heads
+
+
+def init_mlstm(key, cfg: XLSTMConfig, dt: DTypes) -> Params:
+    ks = jax.random.split(key, 8)
+    D, H, Dh = cfg.d_model, cfg.heads, cfg.head_dim
+    return {
+        "wq": init_linear(ks[0], D, D, dt),
+        "wk": init_linear(ks[1], D, D, dt),
+        "wv": init_linear(ks[2], D, D, dt),
+        "wi": init_linear(ks[3], D, H, dt),     # input gate (per head)
+        "wf": init_linear(ks[4], D, H, dt),     # forget gate
+        "wo_gate": init_linear(ks[5], D, D, dt),
+        "norm": init_rmsnorm(Dh, dt),
+        "out": init_linear(ks[6], D, D, dt),
+    }
+
+
+def mlstm_specs(cfg: XLSTMConfig) -> Params:
+    return {
+        "wq": linear_specs(("fsdp", "heads")),
+        "wk": linear_specs(("fsdp", "heads")),
+        "wv": linear_specs(("fsdp", "heads")),
+        "wi": linear_specs(("fsdp", None)),
+        "wf": linear_specs(("fsdp", None)),
+        "wo_gate": linear_specs(("fsdp", "heads")),
+        "norm": rmsnorm_specs(),
+        "out": linear_specs(("heads", "fsdp")),
+    }
+
+
+def mlstm(
+    p: Params, cfg: XLSTMConfig, x: jax.Array, dt: DTypes,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """mLSTM with exponential gating and matrix memory (xLSTM §2.3), in the
+    stabilized parallel form: y_t = sum_{s<=t} D_ts (q_t . k_s) v_s with
+    D_ts = exp(logsig f sums + i_s - m_t) — computed like attention with a
+    decay mask (quadratic in S within chunks; here full parallel form since
+    the 125M config has modest training seq, decode uses the recurrence)."""
+    B, S, D = x.shape
+    H, Dh = cfg.heads, cfg.head_dim
+    q = linear(p["wq"], x, dt).reshape(B, S, H, Dh) / math.sqrt(Dh)
+    k = linear(p["wk"], x, dt).reshape(B, S, H, Dh)
+    v = linear(p["wv"], x, dt).reshape(B, S, H, Dh)
+    i_gate = linear(p["wi"], x, dt).astype(jnp.float32)          # (B,S,H)
+    f_gate = linear(p["wf"], x, dt).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_gate)                            # (B,S,H)
+    if state is not None:
+        # recurrent step (S small, typically 1)
+        def step(carry, t):
+            C, n, m = carry   # C:(B,H,Dh,Dh) n:(B,H,Dh) m:(B,H)
+            qt = q[:, t].astype(jnp.float32)
+            kt = k[:, t].astype(jnp.float32)
+            vt = v[:, t].astype(jnp.float32)
+            it = i_gate[:, t]
+            lf = logf[:, t]
+            m_new = jnp.maximum(lf + m, it)
+            fdec = jnp.exp(lf + m - m_new)
+            iamp = jnp.exp(it - m_new)
+            C = C * fdec[..., None, None] + iamp[..., None, None] * (
+                kt[..., :, None] * vt[..., None, :]
+            )
+            n = n * fdec[..., None] + iamp[..., None] * kt
+            denom = jnp.maximum(
+                jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)), 1.0
+            )
+            yt = jnp.einsum("bhd,bhde->bhe", qt, C) / denom[..., None]
+            return (C, n, m_new), yt
+
+        carry = (state["C"], state["n"], state["m"])
+        carry, ys = jax.lax.scan(step, carry, jnp.arange(S))
+        y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)               # (B,S,H,Dh)
+        new_state = {"C": carry[0], "n": carry[1], "m": carry[2]}
+    else:
+        y = _mlstm_chunked(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), i_gate, logf, min(cfg.chunk, S),
+        ).astype(x.dtype)
+        new_state = None
+    y = rmsnorm(p["norm"], y)
+    o = jax.nn.sigmoid(linear(p["wo_gate"], x, dt)).reshape(B, S, H, Dh)
+    y = (y * o).reshape(B, S, D)
+    return linear(p["out"], y, dt), new_state
+
+
+def _mlstm_chunked(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    i_gate: jax.Array, logf: jax.Array, chunk: int,
+) -> jax.Array:
+    """Chunkwise-parallel stabilized mLSTM (all f32).
+
+    q,k,v: (B,S,H,Dh); i_gate,logf: (B,S,H).  O(S*chunk) memory.
+    The same chunking is mirrored by the Pallas kernel in kernels/mlstm.
+    """
+    B, S, H, Dh = q.shape
+    pad = (-S) % chunk
+    if pad:
+        zc = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v, logf = zc(q), zc(k), zc(v), zc(logf)
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+    nc = (S + pad) // chunk
+
+    def to_chunks(a):
+        return jnp.moveaxis(
+            a.reshape(B, nc, chunk, *a.shape[2:]), 1, 0
+        )  # (nc, B, c, ...)
+
+    qc, kc, vc, ic, fc = map(to_chunks, (q, k, v, i_gate, logf))
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def scan_fn(carry, inp):
+        C, n, m = carry                    # (B,H,Dh,Dh), (B,H,Dh), (B,H)
+        qz, kz, vz, iz, fz = inp           # (B,c,H,Dh)...(B,c,H)
+        cumf = jnp.cumsum(fz, axis=1)      # (B,c,H) inclusive
+        # intra exponents b_ts = cumf_t - cumf_s + i_s  (s <= t)
+        b = cumf[:, :, None, :] - cumf[:, None, :, :] + iz[:, None, :, :]
+        b = jnp.where(causal[None, :, :, None], b, -jnp.inf)
+        # inter exponent c_t = cumf_t + m_in
+        c_t = cumf + m[:, None, :]                         # (B,c,H)
+        m_t = jnp.maximum(jnp.max(b, axis=2), c_t)         # (B,c,H)
+        m_t = jnp.maximum(m_t, -1e30)
+        w = jnp.exp(b - m_t[:, :, None, :])                # (B,t,s,H)
+        qk = jnp.einsum("bthd,bshd->btsh", qz, kz)
+        y = jnp.einsum("btsh,bshd->bthd", w * qk, vz)
+        inter_amp = jnp.exp(c_t - m_t)                     # (B,t,H)
+        y = y + inter_amp[..., None] * jnp.einsum("bthd,bhde->bthe", qz, C)
+        n_t = jnp.einsum("btsh,bshd->bthd", w, kz) + inter_amp[..., None] * n[:, None]
+        qn = jnp.einsum("bthd,bthd->bth", qz, n_t)
+        h = y / jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))[..., None]
+        # state update to end of chunk
+        fe = cumf[:, -1]                                   # (B,H)
+        e_s = fe[:, None, :] - cumf + iz                   # (B,s,H)
+        m_out = jnp.maximum(m + fe, jnp.max(e_s, axis=1))
+        amp_s = jnp.exp(e_s - m_out[:, None, :])           # (B,s,H)
+        C_new = (
+            C * jnp.exp(m + fe - m_out)[..., None, None]
+            + jnp.einsum("bsh,bshd,bshe->bhde", amp_s, kz, vz)
+        )
+        n_new = (
+            n * jnp.exp(m + fe - m_out)[..., None]
+            + jnp.einsum("bsh,bshd->bhd", amp_s, kz)
+        )
+        return (C_new, n_new, m_out), h
+
+    init = (
+        jnp.zeros((B, H, Dh, Dh), jnp.float32),
+        jnp.zeros((B, H, Dh), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32),
+    )
+    _, hs = jax.lax.scan(scan_fn, init, (qc, kc, vc, ic, fc))
+    out = jnp.moveaxis(hs, 0, 1).reshape(B, nc * chunk, H, Dh)
+    return out[:, :S]
+
+
+def mlstm_init_state(cfg: XLSTMConfig, batch: int):
+    H, Dh = cfg.heads, cfg.head_dim
+    return {
+        "C": jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+        "n": jnp.zeros((batch, H, Dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def init_slstm(key, cfg: XLSTMConfig, dt: DTypes) -> Params:
+    ks = jax.random.split(key, 5)
+    D, H = cfg.d_model, cfg.heads
+    return {
+        "wz": init_linear(ks[0], D, D, dt),
+        "wi": init_linear(ks[1], D, H, dt),
+        "wf": init_linear(ks[2], D, H, dt),
+        "wo_gate": init_linear(ks[3], D, D, dt),
+        "norm": init_rmsnorm(cfg.head_dim, dt),
+        "out": init_linear(ks[4], D, D, dt),
+    }
+
+
+def slstm_specs(cfg: XLSTMConfig) -> Params:
+    return {
+        "wz": linear_specs(("fsdp", "heads")),
+        "wi": linear_specs(("fsdp", None)),
+        "wf": linear_specs(("fsdp", None)),
+        "wo_gate": linear_specs(("fsdp", "heads")),
+        "norm": rmsnorm_specs(),
+        "out": linear_specs(("heads", "fsdp")),
+    }
+
+
+def slstm(
+    p: Params, cfg: XLSTMConfig, x: jax.Array, dt: DTypes,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """sLSTM (xLSTM §2.2): scalar memory per head-dim with exponential
+    gating; sequential lax.scan over time."""
+    B, S, D = x.shape
+    H, Dh = cfg.heads, cfg.head_dim
+    z = jnp.tanh(linear(p["wz"], x, dt)).reshape(B, S, H, Dh).astype(jnp.float32)
+    i_gate = linear(p["wi"], x, dt).astype(jnp.float32)
+    f_gate = linear(p["wf"], x, dt).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_gate)
+
+    def step(carry, t):
+        c, n, m = carry      # (B,H,Dh), (B,H), (B,H)
+        it = i_gate[:, t]
+        lf = logf[:, t]
+        m_new = jnp.maximum(lf + m, it)
+        fdec = jnp.exp(lf + m - m_new)
+        iamp = jnp.exp(it - m_new)
+        c = c * fdec[..., None] + iamp[..., None] * z[:, t]
+        n = n * fdec + iamp
+        h = c / jnp.maximum(n, 1.0)[..., None]
+        return (c, n, m_new), h
+
+    if state is None:
+        carry = (
+            jnp.zeros((B, H, Dh), jnp.float32),
+            jnp.zeros((B, H), jnp.float32),
+            jnp.full((B, H), -1e30, jnp.float32),
+        )
+    else:
+        carry = (state["c"], state["n"], state["m"])
+    carry, hs = jax.lax.scan(step, carry, jnp.arange(S))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                    # (B,S,H,Dh)
+    y = rmsnorm(p["norm"], y)
+    o = jax.nn.sigmoid(linear(p["wo_gate"], x, dt)).reshape(B, S, H, Dh)
+    y = (y * o).reshape(B, S, D)
+    out = linear(p["out"], y, dt)
+    new_state = None
+    if state is not None:
+        new_state = {"c": carry[0], "n": carry[1], "m": carry[2]}
+    return out, new_state
+
+
+def slstm_init_state(cfg: XLSTMConfig, batch: int):
+    H, Dh = cfg.heads, cfg.head_dim
+    return {
+        "c": jnp.zeros((batch, H, Dh), jnp.float32),
+        "n": jnp.zeros((batch, H), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }

@@ -1,0 +1,487 @@
+"""Decoder-only transformer LM (dense GQA / MoE / local:global / M-RoPE).
+
+Covers: qwen3-8b, llama3.2-3b, granite-20b, gemma3-4b (5:1 local:global
+sliding window), qwen2-vl-2b (M-RoPE; embeddings provided by the stub
+frontend), qwen3-moe-235b-a22b and moonshot-v1-16b-a3b (MoE).
+
+Layers are homogeneous and stacked, executed with ``jax.lax.scan`` so the
+94-layer configs trace/compile in O(1) layers.  Per-layer heterogeneity
+(gemma's every-Nth-global pattern) rides along as a scanned boolean that
+switches the attention mask dynamically.
+
+API (used by train/serve/launch):
+    init(key, cfg)                      -> params
+    param_specs(cfg)                    -> logical-axis spec tree
+    forward(params, cfg, batch)         -> (logits, aux_loss)
+    init_cache(cfg, batch, cache_len)   -> cache
+    decode_step(params, cfg, cache, batch) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..parallel.sharding import shard_hint
+from . import common as C
+from .common import DTypes, Params
+from .moe import MoEConfig, init_moe, moe_ffn, moe_specs
+
+
+def _dt(cfg: ModelConfig) -> DTypes:
+    return DTypes(param=cfg.param_dtype, compute=cfg.compute_dtype)
+
+
+def _attn_cfg(cfg: ModelConfig) -> C.AttnConfig:
+    return C.AttnConfig(
+        d_model=cfg.d_model,
+        heads=cfg.heads,
+        kv_heads=cfg.kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        causal=True,
+        window=cfg.sliding_window,
+        qk_norm=cfg.qk_norm,
+        rope_theta=cfg.rope_theta,
+        mrope_sections=cfg.mrope_sections,
+    )
+
+
+def _moe_cfg(cfg: ModelConfig) -> Optional[MoEConfig]:
+    if cfg.moe is None:
+        return None
+    return MoEConfig(
+        d_model=cfg.d_model,
+        d_ff=cfg.moe.d_ff,
+        num_experts=cfg.moe.num_experts,
+        top_k=cfg.moe.top_k,
+        capacity_factor=cfg.moe.capacity_factor,
+        aux_loss_coeff=cfg.moe.aux_loss_coeff,
+        num_shared_experts=cfg.moe.num_shared_experts,
+        ep_axis=cfg.moe_ep_axis,
+        tp_axis="model" if cfg.moe_tp else "__none__",
+        token_scatter=cfg.moe_token_scatter,
+    )
+
+
+# ---------------------------------------------------------------------------
+# init / specs
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig) -> Params:
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "ln1": C.init_rmsnorm(cfg.d_model, dt),
+        "attn": C.init_attention(ks[0], _attn_cfg(cfg), dt),
+        "ln2": C.init_rmsnorm(cfg.d_model, dt),
+    }
+    mcfg = _moe_cfg(cfg)
+    if mcfg is not None:
+        p["moe"] = init_moe(ks[1], mcfg, dt)
+    else:
+        p["ffn"] = C.init_swiglu(ks[2], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def _layer_specs(cfg: ModelConfig) -> Params:
+    p: Params = {
+        "ln1": C.rmsnorm_specs(),
+        "attn": C.attention_specs(_attn_cfg(cfg)),
+        "ln2": C.rmsnorm_specs(),
+    }
+    mcfg = _moe_cfg(cfg)
+    if mcfg is not None:
+        p["moe"] = moe_specs(mcfg)
+    else:
+        p["ffn"] = C.swiglu_specs()
+    return p
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {
+        "embed": C.init_embedding(ks[0], cfg.vocab, cfg.d_model, _dt(cfg)),
+        "layers": C.stack_params(
+            ks[1], cfg.num_layers, lambda k: _init_layer(k, cfg)
+        ),
+        "final_norm": C.init_rmsnorm(cfg.d_model, _dt(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = C.init_linear(ks[2], cfg.d_model, cfg.vocab, _dt(cfg))
+    return p
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    p: Params = {
+        "embed": C.embedding_specs(),
+        "layers": C.stacked_specs(_layer_specs(cfg)),
+        "final_norm": C.rmsnorm_specs(),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = C.linear_specs(("embed", "vocab"))
+    return p
+
+
+def _is_global_flags(cfg: ModelConfig) -> jax.Array:
+    """Per-layer flag: True = full (global) attention."""
+    L = cfg.num_layers
+    if cfg.sliding_window is None or cfg.global_every is None:
+        return jnp.ones((L,), bool)
+    idx = jnp.arange(L)
+    return (idx % cfg.global_every) == (cfg.global_every - 1)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _layer_fwd(
+    lp: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    positions3: Optional[jax.Array],
+    is_global: jax.Array,
+    dt: DTypes,
+) -> Tuple[jax.Array, jax.Array]:
+    acfg = _attn_cfg(cfg)
+    h = C.rmsnorm(lp["ln1"], x)
+    attn_out = _attention_dynwin(
+        lp["attn"], acfg, h, positions, positions3, is_global, dt, cfg.attn_impl
+    )
+    x = x + attn_out
+    h = C.rmsnorm(lp["ln2"], x)
+    if "moe" in lp:
+        ffn_out, aux = moe_ffn(lp["moe"], _moe_cfg(cfg), h, dt)
+    else:
+        ffn_out, aux = C.swiglu(lp["ffn"], h, dt), jnp.zeros((), jnp.float32)
+    x = x + ffn_out
+    x = shard_hint(x, ("batch", "seq", "embed"))
+    return x, aux
+
+
+def _np_attention(q, k, v, causal, window, scale):
+    """Host numpy GQA attention — the pure_callback body of the flash stub
+    (semantically correct if executed; the dry-run only lowers it)."""
+    import numpy as np
+
+    q = np.asarray(q, np.float32)
+    k = np.asarray(k, np.float32)
+    v = np.asarray(v, np.float32)
+    B, S, H, Dh = q.shape
+    Hk = k.shape[2]
+    g = H // Hk
+    kr = np.repeat(k, g, axis=2)
+    vr = np.repeat(v, g, axis=2)
+    logits = np.einsum("bqhd,bkhd->bhqk", q * scale, kr)
+    qpos = np.arange(S)[:, None]
+    kpos = np.arange(S)[None, :]
+    mask = np.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = np.where(mask[None, None], logits, -1e30)
+    p = np.exp(logits - logits.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bkhd->bqhd", p, vr)
+
+
+def _stub_flash(q, k, v, causal, window, scale):
+    """Opaque fused-attention op: lowers to one custom-call whose HBM
+    traffic is exactly a flash kernel's (q,k,v in / o out; bwd likewise).
+    Used by the dry-run; execution falls back to the host numpy oracle."""
+
+    def fwd_cb(q, k, v):
+        return _np_attention(q, k, v, causal, window, scale).astype(q.dtype)
+
+    @jax.custom_vjp
+    def op(q, k, v):
+        return jax.pure_callback(
+            fwd_cb, jax.ShapeDtypeStruct(q.shape, q.dtype), q, k, v,
+            vmap_method="sequential",
+        )
+
+    def op_fwd(q, k, v):
+        return op(q, k, v), (q, k, v)
+
+    def op_bwd(res, do):
+        q, k, v = res
+
+        def bwd_cb(q, k, v, do):
+            import numpy as np
+
+            qj, kj, vj = jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+            _, vjp = jax.vjp(
+                lambda a, b, c: jnp.asarray(
+                    _np_attention(a, b, c, causal, window, scale)
+                ).astype(a.dtype),
+                qj, kj, vj,
+            )
+            dq, dk, dv = vjp(jnp.asarray(do))
+            return (np.asarray(dq), np.asarray(dk), np.asarray(dv))
+
+        dq, dk, dv = jax.pure_callback(
+            bwd_cb,
+            (
+                jax.ShapeDtypeStruct(q.shape, q.dtype),
+                jax.ShapeDtypeStruct(k.shape, k.dtype),
+                jax.ShapeDtypeStruct(v.shape, v.dtype),
+            ),
+            q, k, v, do,
+            vmap_method="sequential",
+        )
+        return dq, dk, dv
+
+    op.defvjp(op_fwd, op_bwd)
+    return op(q, k, v)
+
+
+def _flash_sharded(q, k, v, mesh, causal, window, scale, stub=False):
+    """Flash attention as a shard_map island: batch over the DP axes, heads
+    over the TP axis, per-shard Pallas kernel — scores never materialize in
+    HBM.  ``stub=True`` lowers the per-shard kernel as an opaque custom-call
+    (dry-run: the CPU backend cannot compile TPU Pallas; the stub carries
+    identical operand/result traffic).
+
+    GQA KV heads are broadcast to the query heads first so the head dim
+    shards cleanly (the kernels reduce dk/dv back over the group)."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..kernels.flash_attention.ops import flash_attention
+
+    B, S, H, Dh = q.shape
+    Hk = k.shape[2]
+    group = H // Hk
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    tp = "model" if "model" in mesh.shape else None
+    bspec = dp if (dp and B % max(1, math.prod(mesh.shape[a] for a in dp)) == 0) else None
+    hspec = tp if (tp and H % mesh.shape[tp] == 0) else None
+    spec = P(bspec, None, hspec, None)
+
+    def body(q, k, v):
+        if stub:
+            return _stub_flash(q, k, v, causal, window, scale)
+        return flash_attention(q, k, v, causal=causal, window=window, scale=scale)
+
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec,
+        check_vma=False,
+    )(q, k, v)
+
+
+def _attention_dynwin(
+    p, acfg: C.AttnConfig, x, positions, positions3, is_global, dt, impl
+):
+    """Attention where the sliding window is switched per layer by a traced
+    boolean (gemma-style local:global inside one scan)."""
+    B, S, D = x.shape
+    H, Hk, Dh = acfg.heads, acfg.kv_heads, acfg.head_dim
+    q = C.linear(p["wq"], x, dt).reshape(B, S, H, Dh)
+    k = C.linear(p["wk"], x, dt).reshape(B, S, Hk, Dh)
+    v = C.linear(p["wv"], x, dt).reshape(B, S, Hk, Dh)
+    q = shard_hint(q, ("batch", "seq", "heads", "head_dim"))
+    k = shard_hint(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = shard_hint(v, ("batch", "seq", "kv_heads", "head_dim"))
+    if acfg.qk_norm:
+        q = C.rmsnorm(p["q_norm"], q)
+        k = C.rmsnorm(p["k_norm"], k)
+    if acfg.mrope_sections is not None and positions3 is not None:
+        q = C.apply_mrope(q, positions3, acfg.mrope_sections, acfg.rope_theta)
+        k = C.apply_mrope(k, positions3, acfg.mrope_sections, acfg.rope_theta)
+    else:
+        q = C.apply_rope(q, positions, acfg.rope_theta)
+        k = C.apply_rope(k, positions, acfg.rope_theta)
+    scale = 1.0 / math.sqrt(Dh)
+    if impl in ("flash", "flash_stub") and acfg.window is None:
+        from ..parallel.sharding import _manual_axes_in_context
+        from ..parallel import sharding as _sh
+
+        mesh = getattr(_sh._state, "mesh", None)
+        if mesh is not None and _manual_axes_in_context() is None:
+            out = _flash_sharded(
+                q, k, v, mesh, acfg.causal, None, scale,
+                stub=(impl == "flash_stub"),
+            )
+            out = out.reshape(B, S, H * Dh)
+            out = shard_hint(out, ("batch", "seq", "heads"))
+            return C.linear(p["wo"], out, dt)
+    group = H // Hk
+    qf = q.astype(jnp.float32) * scale
+    qg = qf.reshape(B, S, Hk, group, Dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos
+    if acfg.window is not None:
+        wmask = kpos > qpos - acfg.window
+        mask = mask & (wmask | is_global)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    out = out.reshape(B, S, H * Dh).astype(x.dtype)
+    out = shard_hint(out, ("batch", "seq", "heads"))
+    return C.linear(p["wo"], out, dt)
+
+
+def forward(
+    params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+) -> Tuple[jax.Array, jax.Array]:
+    """batch: tokens (B,S) int32 [or embeds (B,S,D) for vlm stub],
+    positions (B,S) optional, positions3 (3,B,S) for M-RoPE."""
+    dt = _dt(cfg)
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.compute_dtype)
+    else:
+        x = C.embed(params["embed"], batch["tokens"], dt)
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+    B, S, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    positions3 = batch.get("positions3")
+    flags = _is_global_flags(cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, is_global = xs
+        fwd = _layer_fwd
+        if cfg.remat:
+            fwd = jax.checkpoint(
+                _layer_fwd, policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=(1, 6),
+            )
+        x, aux_l = fwd(lp, cfg, x, positions, positions3, is_global, dt)
+        return (x, aux + aux_l), None
+
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params["layers"], flags)
+    )
+    x = C.rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = C.unembed(params["embed"], x, dt)
+    else:
+        logits = C.linear(params["lm_head"], x, dt)
+        logits = shard_hint(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Dict[str, Any]:
+    L, Hk, Dh = cfg.num_layers, cfg.kv_heads, cfg.resolved_head_dim
+    dtype = cfg.compute_dtype
+    return {
+        "k": jnp.zeros((L, batch, cache_len, Hk, Dh), dtype),
+        "v": jnp.zeros((L, batch, cache_len, Hk, Dh), dtype),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "k": ("stack", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "v": ("stack", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "index": (),
+    }
+
+
+def decode_step(
+    params: Params, cfg: ModelConfig, cache: Dict[str, Any],
+    batch: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One token step: batch has tokens (B,1) [or embeds (B,1,D)] and
+    optionally positions3 (3,B,1)."""
+    dt = _dt(cfg)
+    if "embeds" in batch:
+        x = batch["embeds"].astype(cfg.compute_dtype)
+    else:
+        x = C.embed(params["embed"], batch["tokens"], dt)
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.compute_dtype)
+    B, S, _ = x.shape
+    index = cache["index"]
+    positions = jnp.broadcast_to(index + jnp.arange(S)[None], (B, S))
+    positions3 = batch.get("positions3")
+    flags = _is_global_flags(cfg)
+    acfg = _attn_cfg(cfg)
+
+    def body(carry, xs):
+        x = carry
+        lp, ck, cv, is_global = xs
+        h = C.rmsnorm(lp["ln1"], x)
+        out, (nk, nv) = _decode_attention(
+            lp["attn"], acfg, cfg, h, positions, positions3, is_global,
+            (ck, cv), index, dt,
+        )
+        x = x + out
+        h = C.rmsnorm(lp["ln2"], x)
+        if "moe" in lp:
+            ffn_out, _ = moe_ffn(lp["moe"], _moe_cfg(cfg), h, dt)
+        else:
+            ffn_out = C.swiglu(lp["ffn"], h, dt)
+        x = x + ffn_out
+        return x, (nk, nv)
+
+    x, (nks, nvs) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], flags)
+    )
+    x = C.rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = C.unembed(params["embed"], x, dt)
+    else:
+        logits = C.linear(params["lm_head"], x, dt)
+    new_cache = {"k": nks, "v": nvs, "index": index + S}
+    return logits, new_cache
+
+
+def _decode_attention(
+    p, acfg: C.AttnConfig, cfg: ModelConfig, x, positions, positions3,
+    is_global, kv_cache, index, dt,
+):
+    B, S, D = x.shape
+    H, Hk, Dh = acfg.heads, acfg.kv_heads, acfg.head_dim
+    q = C.linear(p["wq"], x, dt).reshape(B, S, H, Dh)
+    k = C.linear(p["wk"], x, dt).reshape(B, S, Hk, Dh)
+    v = C.linear(p["wv"], x, dt).reshape(B, S, Hk, Dh)
+    if acfg.qk_norm:
+        q = C.rmsnorm(p["q_norm"], q)
+        k = C.rmsnorm(p["k_norm"], k)
+    if acfg.mrope_sections is not None and positions3 is not None:
+        q = C.apply_mrope(q, positions3, acfg.mrope_sections, acfg.rope_theta)
+        k = C.apply_mrope(k, positions3, acfg.mrope_sections, acfg.rope_theta)
+    else:
+        q = C.apply_rope(q, positions, acfg.rope_theta)
+        k = C.apply_rope(k, positions, acfg.rope_theta)
+    ck, cv = kv_cache
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), index, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), index, axis=1)
+    scale = 1.0 / math.sqrt(Dh)
+    Skv = ck.shape[1]
+    group = H // Hk
+    qf = q.astype(jnp.float32) * scale
+    qg = qf.reshape(B, S, Hk, group, Dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, ck.astype(jnp.float32))
+    qpos = jnp.arange(S)[:, None] + index
+    kpos = jnp.arange(Skv)[None, :]
+    mask = kpos <= qpos
+    if acfg.window is not None:
+        mask = mask & ((kpos > qpos - acfg.window) | is_global)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, cv.astype(jnp.float32))
+    out = out.reshape(B, S, H * Dh).astype(x.dtype)
+    return C.linear(p["wo"], out, dt), (ck, cv)

@@ -1,0 +1,179 @@
+"""xLSTM language model (xlstm-125m): mLSTM + sLSTM blocks, no FFN
+(assignment: d_ff=0), pre-RMSNorm residual blocks.
+
+Block pattern: every ``xlstm_slstm_every``-th block is sLSTM, the rest are
+mLSTM (xLSTM[7:1]-flavored).  mLSTM and sLSTM have different param shapes,
+so the two populations are stacked separately and executed in two scans per
+"phase"... no — order matters, so we scan over the *union* with both param
+sets stacked to the same length and a per-layer selector choosing the
+branch (lax.cond); the unused branch's params still flow (zero-cost: cond
+executes one branch).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import common as C
+from .common import DTypes, Params
+from .ssm import (
+    XLSTMConfig,
+    init_mlstm,
+    init_slstm,
+    mlstm,
+    mlstm_init_state,
+    mlstm_specs,
+    slstm,
+    slstm_init_state,
+    slstm_specs,
+)
+
+
+def _dt(cfg: ModelConfig) -> DTypes:
+    return DTypes(param=cfg.param_dtype, compute=cfg.compute_dtype)
+
+
+def _xcfg(cfg: ModelConfig) -> XLSTMConfig:
+    return XLSTMConfig(d_model=cfg.d_model, heads=cfg.heads)
+
+
+def _is_slstm_flags(cfg: ModelConfig) -> jax.Array:
+    idx = jnp.arange(cfg.num_layers)
+    return (idx % cfg.xlstm_slstm_every) == (cfg.xlstm_slstm_every - 1)
+
+
+def init(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    xc = _xcfg(cfg)
+    dt = _dt(cfg)
+
+    def layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln": C.init_rmsnorm(cfg.d_model, dt),
+            "mlstm": init_mlstm(k1, xc, dt),
+            "slstm": init_slstm(k2, xc, dt),
+        }
+
+    return {
+        "embed": C.init_embedding(ks[0], cfg.vocab, cfg.d_model, dt),
+        "layers": C.stack_params(ks[1], cfg.num_layers, layer),
+        "final_norm": C.init_rmsnorm(cfg.d_model, dt),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    xc = _xcfg(cfg)
+    layer = {
+        "ln": C.rmsnorm_specs(),
+        "mlstm": mlstm_specs(xc),
+        "slstm": slstm_specs(xc),
+    }
+    return {
+        "embed": C.embedding_specs(),
+        "layers": C.stacked_specs(layer),
+        "final_norm": C.rmsnorm_specs(),
+    }
+
+
+def forward(
+    params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]
+) -> Tuple[jax.Array, jax.Array]:
+    dt = _dt(cfg)
+    xc = _xcfg(cfg)
+    x = C.embed(params["embed"], batch["tokens"], dt)
+    flags = _is_slstm_flags(cfg)
+
+    def body(x, xs):
+        lp, is_s = xs
+        h = C.rmsnorm(lp["ln"], x)
+
+        def do_s(h):
+            return slstm(lp["slstm"], xc, h, dt)[0]
+
+        def do_m(h):
+            return mlstm(lp["mlstm"], xc, h, dt)[0]
+
+        out = jax.lax.cond(is_s, do_s, do_m, h)
+        return x + out, None
+
+    body_fn = body
+    if cfg.remat:
+        body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body_fn, x, (params["layers"], flags))
+    x = C.rmsnorm(params["final_norm"], x)
+    logits = C.unembed(params["embed"], x, dt)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> Dict[str, Any]:
+    """Recurrent state only — O(1) in context length (the reason xlstm runs
+    the long_500k cell)."""
+    xc = _xcfg(cfg)
+    L = cfg.num_layers
+    m = mlstm_init_state(xc, batch)
+    s = slstm_init_state(xc, batch)
+    stack = lambda t: jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), t
+    )
+    return {"mlstm": stack(m), "slstm": stack(s), "index": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "mlstm": {
+            "C": ("stack", "batch", None, None, None),
+            "n": ("stack", "batch", None, None),
+            "m": ("stack", "batch", None),
+        },
+        "slstm": {
+            "c": ("stack", "batch", None, None),
+            "n": ("stack", "batch", None),
+            "m": ("stack", "batch", None),
+        },
+        "index": (),
+    }
+
+
+def decode_step(
+    params: Params, cfg: ModelConfig, cache: Dict[str, Any],
+    batch: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    dt = _dt(cfg)
+    xc = _xcfg(cfg)
+    x = C.embed(params["embed"], batch["tokens"], dt)
+    flags = _is_slstm_flags(cfg)
+
+    def body(x, xs):
+        lp, mst, sst, is_s = xs
+        h = C.rmsnorm(lp["ln"], x)
+
+        def do_s(op):
+            h, mst, sst = op
+            out, ns = slstm(lp["slstm"], xc, h, dt, state=sst)
+            return out, mst, ns
+
+        def do_m(op):
+            h, mst, sst = op
+            out, nm = mlstm(lp["mlstm"], xc, h, dt, state=mst)
+            return out, nm, sst
+
+        out, nm, ns = jax.lax.cond(is_s, do_s, do_m, (h, mst, sst))
+        return x + out, (nm, ns)
+
+    x, (nms, nss) = jax.lax.scan(
+        body, x, (params["layers"], cache["mlstm"], cache["slstm"], flags)
+    )
+    x = C.rmsnorm(params["final_norm"], x)
+    logits = C.unembed(params["embed"], x, dt)
+    new_cache = {
+        "mlstm": nms,
+        "slstm": nss,
+        "index": cache["index"] + batch["tokens"].shape[1],
+    }
+    return logits, new_cache

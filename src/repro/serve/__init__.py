@@ -1,0 +1,1 @@
+from .serve_step import BatchScheduler, Request, ServeArtifacts, make_serve_step  # noqa: F401

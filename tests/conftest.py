@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests run single-device unless a test spawns its own subprocess with
+# --xla_force_host_platform_device_count (per the assignment: never set the
+# device-count flag globally).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

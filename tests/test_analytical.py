@@ -1,0 +1,90 @@
+"""§4.2 / §6.3-6.4: analytical model properties and paper claims."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analytical import (
+    LinkConstants,
+    alltoall_throughput_dragonfly,
+    alltoall_throughput_hyperx,
+    alltoall_throughput_torus,
+    paper_fig15_curves,
+    t_allreduce_2d_ring,
+    t_allreduce_hd,
+    t_allreduce_hierarchical,
+    t_allreduce_hyperx_a2a,
+    t_allreduce_node_level,
+    t_allreduce_ring,
+    t_ring_phase,
+)
+
+
+def test_eq2_eq3_scaling():
+    """HyperX all-to-all throughput is scale-independent; Torus decays."""
+    assert alltoall_throughput_hyperx(4, 4) == pytest.approx(2.0)
+    t64 = alltoall_throughput_torus(64, 4, 4)
+    t128 = alltoall_throughput_torus(128, 4, 4)
+    assert t128 == pytest.approx(t64 / 2)
+    assert alltoall_throughput_hyperx(4, 4) > alltoall_throughput_torus(128, 4, 4)
+    assert alltoall_throughput_dragonfly(4, 4) == alltoall_throughput_hyperx(4, 4)
+
+
+def test_eq6_limits():
+    # latency-dominated at tiny V, bandwidth-dominated at huge V
+    assert t_ring_phase(8, 0.0, 1e9, 1e-6) == pytest.approx(7e-6)
+    big = t_ring_phase(8, 8e9, 1e9, 0.0)
+    assert big == pytest.approx(7.0 / 8 * 8e9 / 2e9)
+
+
+@given(
+    st.integers(min_value=2, max_value=8),   # m
+    st.integers(min_value=2, max_value=64),  # p
+    st.floats(min_value=1e6, max_value=1e10),
+)
+@settings(max_examples=40, deadline=None)
+def test_eq8_beats_eq7_when_k_over_2(m, p, V):
+    """Paper: for k > 2 the hierarchical algorithm beats the 2D-ring."""
+    nB = 4 * 100e9
+    alpha = 300e-9
+    k = 4.0
+    hier = t_allreduce_hierarchical(m, p, V, nB, alpha, k)
+    ring2d = t_allreduce_2d_ring(m, p, V, nB, alpha)
+    assert hier < ring2d * 1.02
+
+
+def test_eq13_latency_scale_free():
+    """All-to-all-based AR latency does not grow with p (Eq. 13)."""
+    nB, alpha, k = 400e9, 300e-9, 4.0
+    t8 = t_allreduce_hyperx_a2a(4, 8, 1e3, nB, alpha, k)
+    t64 = t_allreduce_hyperx_a2a(4, 64, 1e3, nB, alpha, k)
+    assert t64 < t8 * 1.5  # latency term flat; only (p^2-1)/p^2 varies
+
+
+def test_fig15_ordering():
+    """Fig. 15: hierarchical fastest, 1D-ring slowest at small sizes."""
+    curves = paper_fig15_curves([1e6], [16])
+    r = curves["ring_1d"][16][1e6]
+    t = curves["torus_2d"][16][1e6]
+    h = curves["hierarchical"][16][1e6]
+    assert h < t < r
+
+
+def test_fig15_large_sizes_converge():
+    """At large V all algorithms are near bandwidth-optimal (paper §6.4)."""
+    curves = paper_fig15_curves([4e9], [8])
+    vals = [curves[a][8][4e9] for a in ("ring_1d", "torus_2d", "hierarchical")]
+    assert max(vals) / min(vals) < 2.5
+
+
+def test_hd_allreduce_monotone():
+    t2 = t_allreduce_hd([4, 4], 1e9, [100e9, 100e9], 1e-6)
+    t3 = t_allreduce_hd([4, 4, 4], 1e9, [100e9, 100e9, 100e9], 1e-6)
+    assert t3 > 0 and t2 > 0
+
+
+def test_node_level_eq9():
+    t1 = t_allreduce_node_level(1, 16, 1e9, 400e9, 3e-7, m=4)
+    t2 = t_allreduce_node_level(2, 16, 1e9, 400e9, 3e-7, m=4)
+    assert t2 < t1  # 2D split halves serialized volume

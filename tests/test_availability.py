@@ -1,0 +1,93 @@
+"""§6.6 / §A.5: Algorithm 2 and MLaaS allocation."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.availability import (
+    allocate_multi_jobs,
+    availability_curve,
+    best_case_allocation,
+    max_single_allocation,
+    utilization,
+    worst_case_allocation,
+)
+
+
+def test_no_faults():
+    assert max_single_allocation(8, []) == 64
+
+
+def test_same_row_best_case():
+    """All faults in one row cost exactly one row (paper best case)."""
+    assert max_single_allocation(8, [(2, 1), (2, 5), (2, 7)]) == 8 * 7
+
+
+def test_isolated_balanced_split():
+    # paper: (n - ceil(f/2)) x (n - floor(f/2))
+    assert max_single_allocation(8, [(0, 0), (1, 1), (2, 2)]) == (8 - 2) * (8 - 1)
+
+
+def test_clustered_enumeration():
+    # two faults sharing a row: disabling that one row is optimal
+    assert max_single_allocation(8, [(3, 1), (3, 6)]) == 8 * 7
+    # L-shape: (1,1),(1,5),(4,5) -> disable row 1 + column 5 = 7x7
+    assert max_single_allocation(8, [(1, 1), (1, 5), (4, 5)]) == 49
+
+
+def _brute_force(n, faults):
+    """Exhaustive row/col disabling over all assignments (small n)."""
+    import itertools
+
+    best = 0
+    for bits in itertools.product((0, 1), repeat=len(faults)):
+        rows = {f[0] for f, b in zip(faults, bits) if b == 0}
+        cols = {f[1] for f, b in zip(faults, bits) if b == 1}
+        best = max(best, (n - len(rows)) * (n - len(cols)))
+    return best
+
+
+@given(
+    st.integers(min_value=4, max_value=7),
+    st.lists(
+        st.tuples(st.integers(0, 6), st.integers(0, 6)),
+        min_size=0, max_size=5, unique=True,
+    ),
+)
+@settings(max_examples=60, deadline=None)
+def test_matches_bruteforce(n, faults):
+    faults = [(r % n, c % n) for r, c in faults]
+    faults = list(dict.fromkeys(faults))
+    assert max_single_allocation(n, faults) == _brute_force(n, faults)
+
+
+def test_worst_vs_best_bounds():
+    n = 16
+    for f in range(0, 8):
+        w = worst_case_allocation(n, f)
+        b = best_case_allocation(n, f)
+        assert w <= b
+
+
+def test_availability_above_90pct_at_typical_rate():
+    """Paper Fig. 17: availability > 90% at 0.1% failure rate."""
+    curve = availability_curve(32, [0.001], samples=20)
+    assert curve[0.001] > 0.90
+
+
+def test_mlaas_utilization_better_than_single():
+    n = 8
+    faults = [(0, 0), (3, 4), (6, 2)]
+    single = max_single_allocation(n, faults)
+    jobs = allocate_multi_jobs(n, faults)
+    multi = sum(j.size for j in jobs)
+    assert multi >= single
+    assert utilization(n, faults, jobs) <= 1.0
+    # jobs must not overlap and must avoid faults
+    seen = set()
+    fset = set(faults)
+    for j in jobs:
+        for r in j.rows:
+            for c in j.cols:
+                assert (r, c) not in seen
+                assert (r, c) not in fset
+                seen.add((r, c))

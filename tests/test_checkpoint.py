@@ -1,0 +1,141 @@
+"""Checkpoint/restart: atomic save, resume, cross-mesh resharding, GC."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ck
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.arange(24.0).reshape(4, 6), "b": jnp.ones((6,))},
+        "nested": [jnp.zeros((2, 2)), jnp.full((3,), 7.0)],
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 10, t, extra={"step": 10})
+    like = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t
+    )
+    restored, extra = ck.restore(str(tmp_path), like)
+    assert extra["step"] == 10
+    for a, b in zip(
+        jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(restored)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_pointer_and_overwrite(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    ck.save(str(tmp_path), 5, t)
+    assert ck.latest_step(str(tmp_path)) == 5
+
+
+def test_shape_mismatch_raises(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    bad = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct((a.shape[0] + 1,) + a.shape[1:], a.dtype), t
+    )
+    with pytest.raises(ValueError):
+        ck.restore(str(tmp_path), bad)
+
+
+def test_missing_leaf_raises(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    like = {"params": {"w": jax.ShapeDtypeStruct((4, 6), jnp.float32)},
+            "something_else": jax.ShapeDtypeStruct((1,), jnp.float32)}
+    with pytest.raises(KeyError):
+        ck.restore(str(tmp_path), like)
+
+
+def test_trainer_resume_and_gc(tmp_path):
+    """Full loop: train, checkpoint, kill, resume on a fresh process state."""
+    from repro.configs import get_smoke_config
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models.model_zoo import get_model
+    from repro.train import optimizer as opt_lib
+    from repro.train.trainer import CheckpointPolicy, train_loop, resume
+
+    cfg = get_smoke_config("llama3.2-3b")
+    zoo = get_model(cfg)
+    ocfg = opt_lib.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+    params = zoo.init(jax.random.PRNGKey(0))
+    opt = opt_lib.init(ocfg, params)
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=4))
+
+    def step_fn(p, o, b):
+        def loss_fn(p):
+            return zoo.loss(p, {k: jnp.asarray(v) for k, v in b.items()})
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(p)
+        p, o, om = opt_lib.apply(ocfg, o, p, grads)
+        om["loss"] = loss
+        return p, o, om
+
+    pol = CheckpointPolicy(str(tmp_path), every_steps=3, keep_last=2)
+    res = train_loop(
+        jax.jit(step_fn), params, opt, data.batches(0), num_steps=7,
+        ckpt=pol, log_every=100, log_fn=lambda s: None,
+    )
+    assert res.steps_done == 7
+    assert ck.latest_step(str(tmp_path)) == 6
+    # GC kept only the last 2
+    kept = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
+    assert len(kept) == 2
+
+    p2, o2, start = resume(
+        str(tmp_path),
+        jax.tree_util.tree_map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params),
+        jax.eval_shape(lambda p: opt_lib.init(ocfg, p), params),
+    )
+    assert start == 6
+    res2 = train_loop(
+        jax.jit(step_fn), p2, o2, data.batches(start), num_steps=9,
+        start_step=start, log_every=100, log_fn=lambda s: None,
+    )
+    assert res2.steps_done == 3
+
+
+def test_elastic_reshard_subprocess():
+    """Save on a 1-device layout, restore sharded onto an 8-device mesh —
+    the elastic-restart path after a RailX reallocation."""
+    import subprocess, sys, textwrap, tempfile
+
+    d = tempfile.mkdtemp()
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code1 = f"""
+import jax, jax.numpy as jnp
+from repro.checkpoint import checkpoint as ck
+t = {{"w": jnp.arange(64.0).reshape(8, 8)}}
+ck.save({d!r}, 3, t)
+"""
+    code2 = f"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import checkpoint as ck
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+like = {{"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
+sh = {{"w": NamedSharding(mesh, P("data", None))}}
+t, _ = ck.restore({d!r}, like, shardings=sh)
+assert len(t["w"].sharding.device_set) == 8
+np.testing.assert_array_equal(np.asarray(t["w"]), np.arange(64.0).reshape(8, 8))
+print("ok")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src
+    r1 = subprocess.run([sys.executable, "-c", textwrap.dedent(code1)],
+                        capture_output=True, text=True, env=env, timeout=300)
+    assert r1.returncode == 0, r1.stderr[-2000:]
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r2 = subprocess.run([sys.executable, "-c", textwrap.dedent(code2)],
+                        capture_output=True, text=True, env=env, timeout=300)
+    assert r2.returncode == 0, r2.stderr[-2000:]
+    assert "ok" in r2.stdout

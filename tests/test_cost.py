@@ -1,0 +1,53 @@
+"""§6.2 Tables 3/6: cost model must reproduce the paper's numbers."""
+
+import pytest
+
+from repro.core.cost import CostRow, Prices, table3, table6
+
+# name -> (scale, switches, pcc, aot, cost_musd)
+PAPER_TABLE6 = {
+    "2-Tier Nonbl. FT": (2048, 3456, 0, 294912, 415.9),
+    "1:3 Tap. 2-Tier FT": (3072, 2880, 0, 294912, 395.7),
+    "1-FT Hx4Mesh": (16384, 2304, 0, 294912, 375.6),
+    "1-FT Hx7Mesh": (50176, 4032, 0, 516096, 657.2),
+    "TPUv4 (3D-Torus w/ OCS)": (4096, 288, 30720, 36864, 185.7),
+    "3D Torus w/o OCS": (4096, 0, 30720, 36864, 45.0),
+    "Rail-Only (2D FT)": (4096, 2304, 0, 294912, 375.6),
+    "RailX4Mesh": (65536, 4608, 0, 589824, 751.1),
+    "RailX7Mesh": (200704, 8064, 0, 1032192, 1314.4),
+    "4-Tier Nonbl. FT": (196608, 774144, 0, 56623104, 83718),
+    "1:7:49 Tap. 3-Tier FT": (200704, 149760, 0, 16809984, 22052),
+    "2-FT Hx7Mesh": (200704, 48384, 0, 4128768, 5822),
+}
+
+
+@pytest.mark.parametrize("name", list(PAPER_TABLE6))
+def test_table6_row(name):
+    rows = table6()
+    r = rows[name]
+    scale, switches, pcc, aot, cost = PAPER_TABLE6[name]
+    assert r.scale == scale
+    assert r.switches == switches
+    assert r.pcc == pcc
+    assert r.aot == aot
+    assert r.cost_usd / 1e6 == pytest.approx(cost, rel=0.015)
+
+
+def test_headline_claims():
+    """Abstract: RailX < 10% FT cost per injection BW, < 50% per bisection
+    BW; ~\\$1.3B for 200K chips at 1.8 TB/s."""
+    rows = table6()
+    base = rows["2-Tier Nonbl. FT"]
+    rx7 = rows["RailX7Mesh"]
+    assert rx7.rel_cost_per_inject(base) < 0.10
+    assert rx7.rel_cost_per_global_bw(base) < 0.50
+    assert rx7.scale > 200_000
+    assert 1.2e9 < rx7.cost_usd < 1.4e9
+
+
+def test_table3_relative_columns():
+    t3 = {r["name"]: r for r in table3()}
+    assert t3["RailX7Mesh"]["cost_per_inject_x"] <= 0.04
+    assert t3["RailX4Mesh"]["glob_bw_pct_inject"] == pytest.approx(12.5, abs=0.1)
+    assert t3["1:3 Tap. 2-Tier FT"]["glob_bw_pct_inject"] == pytest.approx(33.3, abs=0.1)
+    assert t3["TPUv4 (3D-Torus w/ OCS)"]["glob_bw_pct_inject"] == pytest.approx(4.2, abs=0.1)

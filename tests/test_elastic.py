@@ -1,0 +1,70 @@
+"""Elastic recovery planning (launch/elastic.py) + MoE token-scatter M4."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.elastic import plan_recovery
+
+
+def test_plan_recovery_no_failures():
+    p = plan_recovery(16, [], model_axis=16)
+    assert p.healthy_nodes == 256
+    assert p.mesh_shape == (256, 16)
+    assert p.lost_fraction == 0.0
+
+
+def test_plan_recovery_single_failure():
+    p = plan_recovery(16, [(3, 7)], model_axis=16)
+    # one fault: lose one row or column -> 16*15
+    assert p.healthy_nodes == 240
+    assert p.grid_side_rows * p.grid_side_cols == 240
+    assert p.lost_fraction == pytest.approx(1 - 240 / 256)
+
+
+def test_plan_recovery_worst_case_spread():
+    p = plan_recovery(8, [(0, 0), (1, 1), (2, 2), (3, 3)], model_axis=4)
+    assert p.healthy_nodes == 6 * 6
+    assert p.mesh_shape == (36, 4)
+
+
+def test_plan_recovery_same_row():
+    p = plan_recovery(8, [(2, 1), (2, 5)], model_axis=4)
+    assert p.healthy_nodes == 7 * 8
+
+
+def test_moe_token_scatter_matches_dense():
+    """M4 (token-scatter EP) is numerically identical to the oracle."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    src = __import__("os").path.join(
+        __import__("os").path.dirname(__file__), "..", "src"
+    )
+    code = """
+import jax, jax.numpy as jnp
+from repro.models.moe import MoEConfig, init_moe, moe_ffn_dense, moe_ffn_ep
+from repro.models.common import DTypes
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+dt = DTypes()
+cfg = MoEConfig(d_model=32, d_ff=16, num_experts=8, top_k=2,
+                capacity_factor=8.0, token_scatter=True)
+p = init_moe(jax.random.PRNGKey(0), cfg, dt)
+x = jax.random.normal(jax.random.PRNGKey(1), (8, 4, 32))
+dense, _ = moe_ffn_dense(p, cfg, x, dt)
+ep, _ = jax.jit(lambda p, x: moe_ffn_ep(p, cfg, x, dt, mesh))(p, x)
+assert float(jnp.abs(dense - ep).max()) < 2e-4
+print("ok")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "ok" in out.stdout

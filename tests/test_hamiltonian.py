@@ -1,0 +1,69 @@
+"""Lemma 3.1 / §A.1: Hamiltonian decomposition properties."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hamiltonian import (
+    direct_rails_between,
+    hamiltonian_decomposition,
+    rails_for_all_to_all,
+    verify_decomposition,
+    walecki_cycles,
+    walecki_paths,
+)
+
+
+@pytest.mark.parametrize("k", [3, 5, 7, 9, 11, 21, 33, 65, 129])
+def test_walecki_odd(k):
+    cycles = hamiltonian_decomposition(k)
+    assert len(cycles) == (k - 1) // 2
+    verify_decomposition(k, cycles, directed=False)
+
+
+@pytest.mark.parametrize("k", [3, 5, 9, 17])
+def test_odd_directed(k):
+    cycles = hamiltonian_decomposition(k, directed=True)
+    assert len(cycles) == k - 1
+    verify_decomposition(k, cycles, directed=True)
+
+
+@pytest.mark.parametrize("k", [2, 8, 10, 12, 16, 32])
+def test_even_directed(k):
+    cycles = hamiltonian_decomposition(k)
+    assert len(cycles) == max(1, k - 1)
+    verify_decomposition(k, cycles, directed=True)
+
+
+@pytest.mark.parametrize("k", [4, 6])
+def test_exceptions(k):
+    with pytest.raises(ValueError):
+        hamiltonian_decomposition(k)
+
+
+@given(st.integers(min_value=1, max_value=40))
+@settings(max_examples=20, deadline=None)
+def test_walecki_paths_are_hamiltonian(m):
+    paths = walecki_paths(m)
+    assert len(paths) == m
+    seen_edges = set()
+    for p in paths:
+        assert sorted(p) == list(range(2 * m))
+        for a, b in zip(p, p[1:]):
+            e = frozenset((a, b))
+            assert e not in seen_edges
+            seen_edges.add(e)
+
+
+@pytest.mark.parametrize("k", [5, 7, 8, 9])
+def test_lemma31_two_rails_per_pair(k):
+    """Any two nodes are directly connected on exactly two directed rails."""
+    for a in range(k):
+        for b in range(a + 1, k):
+            rails = direct_rails_between(k, a, b)
+            assert len(rails) == 2, (a, b, rails)
+
+
+def test_rails_budget():
+    assert rails_for_all_to_all(5) == 2
+    assert rails_for_all_to_all(9) == 4
+    assert rails_for_all_to_all(8) == 7

@@ -1,0 +1,85 @@
+"""§5 / §A.3: Table 4 volumes, bandwidth allocation, dimension splitting."""
+
+import pytest
+
+from repro.core.mapping import (
+    ModelSpec,
+    ParallelismPlan,
+    WorkloadShape,
+    allocate_bandwidth_dynamic,
+    allocate_bandwidth_static,
+    plan_dimension_split,
+    table4_volumes,
+)
+from repro.core.topology import RailXConfig
+
+LLAMA70B = ModelSpec(
+    layers=80, hidden=8192, intermediate=28672, vocab=128256,
+    heads=64, kv_heads=8, experts=8, top_k=2,
+)
+PLAN = ParallelismPlan(tp=4, cp=2, ep=2, dp=4, pp=2)
+SHAPE = WorkloadShape(micro_batch=1, num_micro_batches=8, seq_len=8192)
+
+
+def test_attention_dp_identity():
+    assert PLAN.attention_dp == PLAN.ep * PLAN.dp
+    assert PLAN.total == 4 * 2 * 2 * 4 * 2
+
+
+def test_table4_structure():
+    vols = table4_volumes(LLAMA70B, PLAN, SHAPE)
+    assert vols["tp_attn"].pattern.startswith("reduce_scatter")
+    assert vols["ep"].pattern == "all_to_all"
+    assert vols["pp"].pattern == "point_to_point"
+    # TP is the heaviest total traffic (paper: innermost = most massive)
+    tp_total = vols["tp_attn"].total_bytes + vols["tp_ffn"].total_bytes
+    for k, v in vols.items():
+        if not k.startswith("tp"):
+            assert tp_total > v.total_bytes, k
+    # CP volume scales with kv ratio
+    assert vols["cp"].volume_bytes == pytest.approx(
+        1 * 8192 * 8192 * (2 * 8 / 64) / 4 * 2
+    )
+
+
+def test_static_allocation_eq11():
+    # equal volumes, no overlap -> symmetric split
+    n1, n2, t = allocate_bandwidth_static(1e9, 1e9, 10, 50e9)
+    assert n1 == n2 == 5
+    # 4x volume on dim2 -> more ports to dim2
+    n1b, n2b, _ = allocate_bandwidth_static(1e9, 4e9, 10, 50e9)
+    assert n2b > n1b
+    # overlappable compute hides dim1 comm -> give dim2 even more
+    n1c, n2c, _ = allocate_bandwidth_static(
+        1e9, 4e9, 10, 50e9, overlap1=1.0, overlap2=0.0
+    )
+    assert n1c <= n1b
+
+
+def test_dynamic_beats_static_for_separated_comms():
+    """§5.2: OCS reconfiguration gives each phase the full dimension."""
+    v1, v2, ports, bw = 2e9, 2e9, 10, 50e9
+    _, _, t_static = allocate_bandwidth_static(v1, v2, ports, bw)
+    t_dyn = allocate_bandwidth_dynamic(v1, v2, ports, bw, switch_gap=6e-3)
+    assert t_dyn < t_static
+
+
+def test_plan_dimension_split():
+    cfg = RailXConfig(m=2, n=4, R=32)
+    res = plan_dimension_split(cfg, LLAMA70B, PLAN, SHAPE)
+    names = {s.name for s in res.specs}
+    assert names == {"cp", "ep", "dp", "pp"}
+    # EP must be an all-to-all dimension (its traffic pattern demands it)
+    ep = next(s for s in res.specs if s.name == "ep")
+    assert ep.interconnect == "all_to_all"
+    # rails budget respected per physical dim
+    for phys in ("X", "Y"):
+        assert sum(s.rails for s in res.specs if s.phys == phys) <= cfg.r
+
+
+def test_tp_exceeding_node_raises():
+    cfg = RailXConfig(m=2, n=4, R=32)
+    with pytest.raises(ValueError):
+        plan_dimension_split(
+            cfg, LLAMA70B, ParallelismPlan(tp=64), SHAPE
+        )

@@ -1,0 +1,141 @@
+"""Deeper model-semantics tests: sliding-window masks, M-RoPE, whisper
+cross-attention, loss masking, and hypothesis sweeps on common blocks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import common as C
+from repro.models.common import DTypes
+
+DT = DTypes()
+
+
+def test_sliding_window_mask_semantics():
+    """A local (windowed) layer must ignore tokens beyond the window."""
+    from repro.configs import get_smoke_config
+    from repro.models.model_zoo import get_model
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        get_smoke_config("gemma3-4b"), num_layers=3, global_every=1000,  # never global
+        sliding_window=4,
+    )
+    zoo = get_model(cfg)
+    params = zoo.init(jax.random.PRNGKey(0))
+    B, S = 1, 16
+    t1 = jnp.zeros((B, S), jnp.int32).at[:, 0].set(5)
+    t2 = jnp.zeros((B, S), jnp.int32).at[:, 0].set(9)
+    l1, _ = zoo.forward(params, {"tokens": t1})
+    l2, _ = zoo.forward(params, {"tokens": t2})
+    # position 0 differs -> within window positions differ...
+    assert not jnp.allclose(l1[:, 1], l2[:, 1])
+    # ...but with window=4 and 3 layers, receptive field is 3*(4-1)=9:
+    # the last position (15) cannot see position 0
+    np.testing.assert_allclose(
+        np.asarray(l1[:, 15]), np.asarray(l2[:, 15]), atol=1e-5
+    )
+
+
+def test_global_layers_see_everything():
+    from repro.configs import get_smoke_config
+    from repro.models.model_zoo import get_model
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        get_smoke_config("gemma3-4b"), num_layers=3, global_every=1,
+        sliding_window=4,
+    )  # every layer global
+    zoo = get_model(cfg)
+    params = zoo.init(jax.random.PRNGKey(0))
+    t1 = jnp.zeros((1, 16), jnp.int32).at[:, 0].set(5)
+    t2 = jnp.zeros((1, 16), jnp.int32).at[:, 0].set(9)
+    l1, _ = zoo.forward(params, {"tokens": t1})
+    l2, _ = zoo.forward(params, {"tokens": t2})
+    assert not jnp.allclose(l1[:, 15], l2[:, 15])
+
+
+def test_mrope_sections_rotate_independently():
+    q = jnp.ones((1, 4, 1, 16))
+    pos_t = jnp.arange(4)[None]
+    p3_a = jnp.stack([pos_t, jnp.zeros_like(pos_t), jnp.zeros_like(pos_t)])
+    p3_b = jnp.stack([pos_t, pos_t, jnp.zeros_like(pos_t)])
+    out_a = C.apply_mrope(q, p3_a, (2, 3, 3))
+    out_b = C.apply_mrope(q, p3_b, (2, 3, 3))
+    # temporal section identical, height section differs
+    np.testing.assert_allclose(
+        np.asarray(out_a[..., :2]), np.asarray(out_b[..., :2]), atol=1e-6
+    )
+    assert not jnp.allclose(out_a[..., 2:5], out_b[..., 2:5])
+
+
+def test_rope_relative_property():
+    """Attention logits depend only on relative positions under RoPE."""
+    Dh = 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, Dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, Dh))
+
+    def logit(pq, pk):
+        qr = C.apply_rope(q, jnp.array([[pq]]))
+        kr = C.apply_rope(k, jnp.array([[pk]]))
+        return float(jnp.sum(qr * kr))
+
+    assert logit(3, 1) == pytest.approx(logit(10, 8), rel=1e-4)
+
+
+def test_whisper_cross_attention_uses_encoder():
+    from repro.configs import get_smoke_config
+    from repro.models.model_zoo import get_model
+
+    cfg = get_smoke_config("whisper-large-v3")
+    zoo = get_model(cfg)
+    params = zoo.init(jax.random.PRNGKey(0))
+    B, S = 1, 8
+    tokens = jnp.zeros((B, S), jnp.int32)
+    e1 = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    e2 = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model))
+    l1, _ = zoo.forward(params, {"tokens": tokens, "enc_embeds": e1})
+    l2, _ = zoo.forward(params, {"tokens": tokens, "enc_embeds": e2})
+    assert not jnp.allclose(l1, l2)
+
+
+def test_loss_mask():
+    from repro.configs import get_smoke_config
+    from repro.models.model_zoo import get_model
+
+    cfg = get_smoke_config("llama3.2-3b")
+    zoo = get_model(cfg)
+    params = zoo.init(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    batch = {
+        "tokens": jnp.zeros((B, S), jnp.int32),
+        "targets": jnp.ones((B, S), jnp.int32),
+        "loss_mask": jnp.zeros((B, S)).at[:, :4].set(1.0),
+    }
+    loss_m, _ = zoo.loss(params, batch)
+    batch2 = dict(batch)
+    batch2["targets"] = batch["targets"].at[:, 4:].set(7)  # masked region
+    loss_m2, _ = zoo.loss(params, batch2)
+    assert float(loss_m) == pytest.approx(float(loss_m2), rel=1e-6)
+
+
+@given(st.integers(min_value=1, max_value=4), st.integers(min_value=8, max_value=32))
+@settings(max_examples=8, deadline=None)
+def test_rmsnorm_scale_invariance(b, d):
+    """RMSNorm output is invariant to positive rescaling of its input."""
+    p = {"scale": jnp.ones((d,))}
+    x = jax.random.normal(jax.random.PRNGKey(b), (b, d))
+    y1 = C.rmsnorm(p, x)
+    y2 = C.rmsnorm(p, x * 7.3)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_swiglu_shapes_and_grad():
+    p = C.init_swiglu(jax.random.PRNGKey(0), 16, 32, DT)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 16))
+    y = C.swiglu(p, x, DT)
+    assert y.shape == x.shape
+    g = jax.grad(lambda p: C.swiglu(p, x, DT).sum())(p)
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree_util.tree_leaves(g))

@@ -1,0 +1,61 @@
+"""Assignment contract: make_production_mesh shapes/axes + input_specs."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.launch.dryrun import cell_is_skipped, input_specs
+
+
+def test_production_mesh_contract_subprocess():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.mesh import make_production_mesh
+m1 = make_production_mesh()
+assert dict(m1.shape) == {"data": 16, "model": 16}, m1.shape
+m2 = make_production_mesh(multi_pod=True)
+assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}, m2.shape
+print("ok")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "ok" in out.stdout
+
+
+def test_input_specs_cover_all_cells():
+    """Every non-skipped (arch x shape) cell has well-formed input specs."""
+    from repro.configs import ARCHS
+    from repro.launch.dryrun import dryrun_model_config
+
+    for arch in ARCHS:
+        cfg = dryrun_model_config(get_config(arch))
+        for name, shape in SHAPES.items():
+            if cell_is_skipped(arch, name):
+                continue
+            specs = input_specs(cfg, shape)
+            assert specs, (arch, name)
+            for key, sds in specs.items():
+                assert all(d > 0 for d in sds.shape), (arch, name, key)
+            if shape.kind == "train":
+                assert "targets" in specs
+            if shape.kind == "decode":
+                assert specs["tokens"].shape[1] == 1
+                assert specs["tokens"].shape[0] == shape.global_batch
+
+
+def test_long_500k_skip_policy():
+    assert cell_is_skipped("qwen3-8b", "long_500k")
+    assert cell_is_skipped("gemma3-4b", "long_500k")  # local:global counts as full-attn
+    assert not cell_is_skipped("xlstm-125m", "long_500k")
+    assert not cell_is_skipped("zamba2-7b", "long_500k")

@@ -1,0 +1,102 @@
+"""Loop-aware HLO roofline parser unit tests (the measurement backbone)."""
+
+import textwrap
+
+from repro.launch import roofline as R
+
+HLO = textwrap.dedent("""
+    HloModule test
+
+    %body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+      %w = f32[8,8]{1,0} constant({...})
+      %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups=[2,4]<=[8], to_apply=%add.0
+      %one = s32[] constant(1)
+      %ni = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ar)
+    }
+
+    %cond.1 (p: (s32[], f32[8,8])) -> pred[] {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(7)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    %add.0 (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main.1 (x: f32[8,8]) -> f32[8,8] {
+      %x = f32[8,8]{1,0} parameter(0)
+      %c0 = s32[] constant(0)
+      %t0 = (s32[], f32[8,8]) tuple(%c0, %x)
+      %w = (s32[], f32[8,8]) while(%t0), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"7"}}
+      ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_trip_counts_and_flops():
+    stats = R.analyze_hlo(HLO, default_trip=1)
+    assert stats.trip_counts == {"body.1": 7}
+    # dot: 2 * 8*8 * 8 = 1024 flops, x7 trips
+    assert stats.flops == 1024 * 7
+    # all-reduce operand: 8*8*4 bytes, x7; iota groups => intra
+    assert stats.collective_bytes == 256 * 7
+    assert stats.intra_collective_bytes == 256 * 7
+    assert stats.collectives["all-reduce"] == 256 * 7
+
+
+def test_condition_fallback_trip():
+    hlo = HLO.replace(', backend_config={"known_trip_count":{"n":"7"}}', "")
+    stats = R.analyze_hlo(hlo, default_trip=1)
+    # trip recovered from the condition's constant(7)
+    assert stats.trip_counts == {"body.1": 7}
+
+
+def test_strided_groups_are_inter():
+    hlo = HLO.replace("replica_groups=[2,4]<=[8]",
+                      "replica_groups=[4,2]<=[2,4]T(1,0)")
+    stats = R.analyze_hlo(hlo, default_trip=1)
+    assert stats.inter_collective_bytes == 256 * 7
+    assert stats.intra_collective_bytes == 0
+
+
+def test_dus_fusion_inplace_accounting():
+    hlo = textwrap.dedent("""
+        HloModule t2
+
+        %fused (p0: f32[64,128], p1: f32[1,128], p2: s32[]) -> f32[64,128] {
+          %p0 = f32[64,128]{1,0} parameter(0)
+          %p1 = f32[1,128]{1,0} parameter(1)
+          %p2 = s32[] parameter(2)
+          %z = s32[] constant(0)
+          ROOT %dus = f32[64,128]{1,0} dynamic-update-slice(%p0, %p1, %p2, %z)
+        }
+
+        ENTRY %main.9 (a: f32[64,128], u: f32[1,128], i: s32[]) -> f32[64,128] {
+          %a = f32[64,128]{1,0} parameter(0)
+          %u = f32[1,128]{1,0} parameter(1)
+          %i = s32[] parameter(2)
+          ROOT %f = f32[64,128]{1,0} fusion(%a, %u, %i), kind=kLoop, calls=%fused
+        }
+    """)
+    stats = R.analyze_hlo(hlo, default_trip=1)
+    # in-place DUS: 2 x update bytes (1*128*4), NOT the 64x128 buffer
+    assert stats.hbm_bytes == 2 * 128 * 4 + 4  # update r+w + index scalar
+
+
+def test_report_terms():
+    rep = R.build_report(
+        "a", "s", "pod1", 256, HLO, {"flops": 1.0}, {}, 256 * 6e9,
+        default_trip=1,
+    )
+    assert rep.compute_s > 0
+    assert rep.dominant in ("compute", "memory", "collective")
+    assert 0 <= rep.roofline_fraction

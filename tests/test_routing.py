@@ -1,0 +1,82 @@
+"""§4.1: minimal + non-minimal routing, VC discipline, diameter bounds."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.routing import (
+    RoutingParams,
+    count_hops,
+    hyperx_diameter_bound,
+    max_vc,
+    mesh_route,
+    minimal_route,
+    nonminimal_route,
+    verify_deadlock_discipline,
+)
+
+
+def _rand_chip(rng, p):
+    return (
+        rng.randrange(p.scale_x),
+        rng.randrange(p.scale_y),
+        rng.randrange(p.m),
+        rng.randrange(p.m),
+    )
+
+
+@pytest.mark.parametrize("m,scale", [(2, 3), (4, 5), (4, 9)])
+def test_minimal_route_reaches_and_bounds(m, scale):
+    import random
+
+    p = RoutingParams(m=m, scale_x=scale, scale_y=scale)
+    rng = random.Random(0)
+    ho_bound, hi_bound = hyperx_diameter_bound(m)
+    for _ in range(100):
+        src = _rand_chip(rng, p)
+        dst = _rand_chip(rng, p)
+        hops = minimal_route(p, src, dst)
+        # route must end at dst
+        cur = src
+        for h in hops:
+            assert h.src == cur
+            cur = h.dst
+        assert cur == dst
+        ho, hi = count_hops(hops)
+        assert ho <= ho_bound
+        assert hi <= hi_bound
+        verify_deadlock_discipline(hops)
+        assert max_vc(hops) <= 2 + 1  # d_o + 1
+
+
+def test_paper_example_route():
+    """Figure 10: (0,4) -> (4,0) on 2D-HyperX needs exactly 2 rail hops."""
+    p = RoutingParams(m=4, scale_x=5, scale_y=5)
+    hops = minimal_route(p, (0, 4, 0, 0), (4, 0, 3, 3))
+    ho, hi = count_hops(hops)
+    assert ho == 2
+
+
+def test_torus_routing():
+    p = RoutingParams(m=2, scale_x=8, scale_y=8, topology="torus")
+    hops = minimal_route(p, (0, 0, 0, 0), (4, 5, 1, 1))
+    ho, hi = count_hops(hops)
+    assert ho == 4 + 3  # wraps: min(4, 4)=4 in x, min(5,3)=3 in y
+    verify_deadlock_discipline(hops)
+
+
+def test_nonminimal_route_vc_budget():
+    p = RoutingParams(m=2, scale_x=5, scale_y=5)
+    hops = nonminimal_route(p, (0, 4, 0, 0), (4, 0, 1, 1), via=[(1, 4), (1, 0)])
+    cur = (0, 4, 0, 0)
+    for h in hops:
+        assert h.src == cur
+        cur = h.dst
+    assert cur == (4, 0, 1, 1)
+    # a + 1 VCs with a = len(via) legs (paper §4.1.2)
+    assert max_vc(hops) <= 3 * (2 + 1)
+
+
+def test_mesh_route_dimension_order():
+    hops = mesh_route(0, 0, (0, 0), (3, 2), vc=0)
+    assert len(hops) == 5
+    assert all(h.kind == "mesh" for h in hops)

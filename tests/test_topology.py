@@ -1,0 +1,129 @@
+"""§3.2/§3.3: physical architecture, topology builders, Table 2."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import (
+    CircuitConfig,
+    DimensionSpec,
+    RailXConfig,
+    all_to_all_rail_rings,
+    build_dragonfly,
+    build_hyperx_2d,
+    build_node_mesh,
+    build_torus_2d,
+    bisection_links,
+    configure_rails,
+    dragonfly_max_groups,
+    graph_diameter,
+    hyperx_ring_orders,
+    split_dimensions,
+    table2_metrics,
+    torus_ring_orders,
+    tpuv4_max_chips,
+)
+
+
+def test_eq1_scale():
+    """Eq. (1) with the paper's flagship numbers: >100K chips."""
+    cfg = RailXConfig(m=5, n=4, R=128)
+    assert cfg.num_chips == 102_400
+    cfg7 = RailXConfig(m=7, n=9, R=128)
+    assert cfg7.num_chips == 200_704
+    assert cfg7.num_switches == 63 * 128
+    # TPUv4 comparison: (R/2) m^3
+    assert tpuv4_max_chips(128, 4) == 4096
+
+
+def test_table2():
+    t = table2_metrics(RailXConfig(m=4, n=4, R=128))
+    assert t["torus"]["scale"] == 64 ** 2 * 16
+    assert t["hyperx"]["diameter_ho"] == 2
+    assert t["dragonfly"]["diameter_ho"] == 3
+    assert t["hyperx"]["bisection_per_chip"] == pytest.approx(2.0)
+
+
+@pytest.mark.parametrize("scale", [3, 5, 7])
+def test_hyperx_diameter(scale):
+    g = build_hyperx_2d(scale)
+    assert graph_diameter(g) == 2
+
+
+def test_torus_diameter():
+    assert graph_diameter(build_torus_2d(6)) == 6  # 2 * floor(6/2)
+
+
+def test_dragonfly_diameter():
+    g = build_dragonfly(5, 7)
+    assert graph_diameter(g) <= 3
+
+
+def test_hyperx_bisection_beats_torus():
+    hx = build_hyperx_2d(5)
+    tr = build_torus_2d(5)
+    assert bisection_links(hx) > bisection_links(tr)
+
+
+def test_node_mesh():
+    g = build_node_mesh(4)
+    assert len(g) == 16
+    assert graph_diameter(g) == 6  # 2*(m-1)
+
+
+def test_dimension_split_valid():
+    cfg = RailXConfig(m=2, n=4, R=32)  # r = 8
+    specs = [
+        DimensionSpec("ep", scale=3, rails=4, interconnect="all_to_all", phys="X"),
+        DimensionSpec("pp", scale=2, rails=4, interconnect="ring", phys="X"),
+        DimensionSpec("cp", scale=3, rails=4, interconnect="ring", phys="Y"),
+        DimensionSpec("dp", scale=4, rails=4, interconnect="ring", phys="Y"),
+    ]
+    out = split_dimensions(cfg, specs)
+    assert set(out) == {"ep", "pp", "cp", "dp"}
+
+
+def test_dimension_split_overbudget():
+    cfg = RailXConfig(m=2, n=4, R=32)
+    with pytest.raises(ValueError):
+        split_dimensions(
+            cfg, [DimensionSpec("dp", scale=2, rails=9, phys="X")]
+        )
+    with pytest.raises(ValueError):  # a2a scale 4 impossible
+        split_dimensions(
+            cfg,
+            [DimensionSpec("ep", scale=4, rails=8, interconnect="all_to_all")],
+        )
+
+
+def test_circuit_config_port_consistency():
+    """Every node port used at most once per OCS; circuits close rings."""
+    cfg = RailXConfig(m=2, n=2, R=16)
+    orders = hyperx_ring_orders(cfg, scale=5)
+    cc = configure_rails(cfg, orders)
+    for key, pairs in cc.circuits.items():
+        used = set()
+        for a, b in pairs:
+            assert a not in used and b not in used, (key, a, b)
+            used.add(a)
+            used.add(b)
+
+
+@given(st.integers(min_value=3, max_value=11).filter(lambda k: k not in (4, 6)))
+@settings(max_examples=8, deadline=None)
+def test_a2a_rail_rings_cover_pairs(scale):
+    rings = all_to_all_rail_rings(scale)
+    pairs = set()
+    for ring in rings:
+        for a, b in zip(ring, ring[1:] + ring[:1]):
+            pairs.add(frozenset((a, b)))
+    want = {
+        frozenset((a, b))
+        for a in range(scale)
+        for b in range(a + 1, scale)
+    }
+    assert pairs == want
+
+
+def test_dragonfly_group_budget():
+    cfg = RailXConfig(m=2, n=2, R=256)
+    assert dragonfly_max_groups(cfg) == min(4 ** 2 + 4 + 1, 128)
