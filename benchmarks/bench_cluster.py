@@ -1,0 +1,84 @@
+"""Cluster scheduler benchmark — emits ``BENCH_cluster.json``.
+
+Measures, at 32x32 and 64x64 node grids:
+
+* ``events_per_sec_loop``  — raw scheduler event-loop rate (circuit
+  validation and flow-model goodput off): the pure discrete-event cost;
+* ``events_per_sec_full``  — end-to-end rate with OCS validation and
+  flow-model goodput on (what the example runs);
+* ``mean_goodput`` / ``utilization`` — trace quality figures from the
+  full run, so later PRs can track perf without regressing fidelity.
+
+  PYTHONPATH=src python benchmarks/bench_cluster.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_cluster.json")
+
+
+def run_grid(side: int, full: bool) -> dict:
+    from repro.cluster import ClusterScheduler, failure_trace, poisson_trace
+    from repro.core.topology import RailXConfig
+
+    cfg = RailXConfig(m=4, n=4, R=2 * side)
+    events = list(
+        poisson_trace(
+            seed=1234, duration_s=24 * 3600.0,
+            arrival_rate_per_h=12.0, mean_service_s=2 * 3600.0,
+        )
+    )
+    events += failure_trace(
+        n=side, seed=1234, duration_s=24 * 3600.0,
+        mtbf_node_s=5e6 * side / 32, mttr_s=1800.0,
+    )
+    sched = ClusterScheduler(
+        cfg, n=side, policy="best_fit",
+        goodput_model="flow" if full else "none",
+        validate_circuits=full,
+    )
+    t0 = time.perf_counter()
+    metrics = sched.run(events)
+    wall = time.perf_counter() - t0
+    s = metrics.summary()
+    return {
+        "grid": f"{side}x{side}",
+        "mode": "full" if full else "loop",
+        "events": s["events"],
+        "wall_s": round(wall, 4),
+        "events_per_sec": round(s["events"] / wall, 1),
+        "jobs": s["jobs"],
+        "finished": s["finished"],
+        "utilization": s["utilization"],
+        "mean_goodput": s["mean_goodput"],
+        "reconfig_rounds": s["reconfig_rounds"],
+        "circuits_flipped": s["circuits_flipped"],
+    }
+
+
+def main() -> None:
+    rows = []
+    for side in (32, 64):
+        for full in (False, True):
+            row = run_grid(side, full)
+            rows.append(row)
+            print(
+                f"bench_cluster_{row['grid']}_{row['mode']},"
+                f"{1e6 / max(row['events_per_sec'], 1e-9):.1f},"
+                f"evps={row['events_per_sec']};goodput={row['mean_goodput']};"
+                f"util={row['utilization']}"
+            )
+    with open(OUT, "w") as f:
+        json.dump({"bench": "cluster", "rows": rows}, f, indent=2)
+    print(f"wrote {os.path.relpath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

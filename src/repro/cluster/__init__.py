@@ -1,0 +1,73 @@
+"""repro.cluster — MLaaS cluster scheduler + OCS reconfiguration engine.
+
+Composes the single-job primitives (``core.topology``, ``core.mapping``,
+``core.availability``, ``core.simulator``) into a discrete-event
+simulation of *operating* a RailX installation: multiple training jobs
+with different shapes and parallelism strategies share one
+reconfigurable fabric; failures are worked around by re-programming the
+OCS layer (paper §6.6, §7).
+"""
+
+from .events import (
+    Event,
+    EventQueue,
+    JobFinish,
+    JobSubmit,
+    NodeFail,
+    NodeRecover,
+)
+from .jobs import (
+    JobMapping,
+    JobSpec,
+    default_plan,
+    make_job,
+    model_spec_from_config,
+    plan_job_mapping,
+)
+from .metrics import TimelineMetrics, estimate_goodput
+from .placement import POLICIES, best_fit, first_fit, get_policy, rail_aware
+from .reconfig import (
+    ReconfigCostModel,
+    ReconfigPlan,
+    SwitchPatch,
+    apply_plan,
+    diff_circuits,
+    job_target_circuits,
+    validate_job_reconfig,
+)
+from .scheduler import ClusterScheduler
+from .trace import fig20_trace, failure_trace, poisson_trace, replay_trace
+
+__all__ = [
+    "ClusterScheduler",
+    "Event",
+    "EventQueue",
+    "JobFinish",
+    "JobMapping",
+    "JobSpec",
+    "JobSubmit",
+    "NodeFail",
+    "NodeRecover",
+    "POLICIES",
+    "ReconfigCostModel",
+    "ReconfigPlan",
+    "SwitchPatch",
+    "TimelineMetrics",
+    "apply_plan",
+    "best_fit",
+    "default_plan",
+    "diff_circuits",
+    "estimate_goodput",
+    "failure_trace",
+    "fig20_trace",
+    "first_fit",
+    "get_policy",
+    "job_target_circuits",
+    "make_job",
+    "model_spec_from_config",
+    "plan_job_mapping",
+    "poisson_trace",
+    "rail_aware",
+    "replay_trace",
+    "validate_job_reconfig",
+]

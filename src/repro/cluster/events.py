@@ -1,0 +1,78 @@
+"""Discrete-event machinery for the cluster scheduler.
+
+Events are totally ordered by (time, priority, seq): the sequence number
+makes the loop deterministic under simultaneous events, and priority puts
+frees/recoveries ahead of submissions at the same instant (so a job
+finishing at t can make room for a job submitted at t).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Iterable, List, Optional, Tuple, Union
+
+from .jobs import JobSpec
+
+Coord = Tuple[int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSubmit:
+    time: float
+    job: JobSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class JobFinish:
+    time: float
+    job_id: int
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFail:
+    time: float
+    node: Coord
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeRecover:
+    time: float
+    node: Coord
+
+
+Event = Union[JobSubmit, JobFinish, NodeFail, NodeRecover]
+
+# same-instant ordering: failures first (they may evict), then finishes and
+# recoveries (they free capacity), then submissions (they consume it)
+_PRIORITY = {NodeFail: 0, JobFinish: 1, NodeRecover: 1, JobSubmit: 2}
+
+
+class EventQueue:
+    """Deterministic min-heap of events."""
+
+    def __init__(self, events: Iterable[Event] = ()):  # noqa: D107
+        self._heap: List[Tuple[float, int, int, Event]] = []
+        self._seq = itertools.count()
+        for ev in events:
+            self.push(ev)
+
+    def push(self, ev: Event) -> None:
+        heapq.heappush(
+            self._heap, (ev.time, _PRIORITY[type(ev)], next(self._seq), ev)
+        )
+
+    def pop(self) -> Optional[Event]:
+        if not self._heap:
+            return None
+        return heapq.heappop(self._heap)[-1]
+
+    def peek_time(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

@@ -1,0 +1,239 @@
+"""Cluster metrics: flow-model goodput per placed job + timeline accounting.
+
+Goodput (paper §6 figure-of-merit, adapted): build a node-granularity
+``core.simulator.FlowNetwork`` over the job's allocation wired exactly as
+its reconfigured rails (ring links per ring dim, Hamiltonian rail-ring
+links per all-to-all dim), inject the job's Table-4 per-iteration traffic
+as demands, and compare the bottleneck-link serialization time against
+the ideal (perfectly spread) time.  ``goodput = t_ideal / t_actual`` in
+(0, 1]; the scheduler stretches each job's service time by 1/goodput.
+
+Intra-node TP traffic never crosses the OCS fabric and is excluded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from ..core.availability import JobAllocation
+from ..core.mapping import MappingResult
+from ..core.simulator import FlowNetwork, max_utilization, route_demands_ecmp
+from ..core.topology import DimensionSpec, RailXConfig, all_to_all_rail_rings
+from .jobs import JobSpec, job_comm_volumes
+from .reconfig import _rail_ranges, _subgroups
+
+Coord = Tuple[int, int]
+
+
+def _spec_groups(
+    mapping: MappingResult, alloc: JobAllocation, phys: str
+) -> List[Tuple[DimensionSpec, List[List[int]], Tuple[int, int]]]:
+    """(spec, subgroups-of-coords, rail range) for each spec on ``phys``."""
+    specs = [s for s in mapping.specs if s.phys == phys]
+    coords = list(alloc.cols if phys == "X" else alloc.rows)
+    if not specs:
+        return []
+    need = math.prod(s.scale for s in specs)
+    ranges = _rail_ranges(specs)
+    out = []
+    for which, spec in enumerate(specs):
+        if spec.scale < 2:
+            continue
+        out.append((spec, _subgroups(coords[:need], specs, which), ranges[which]))
+    return out
+
+
+def _vertex(phys: str, line: int, coord: int) -> Coord:
+    """Node vertex from a (row-or-column line, coordinate along it)."""
+    return (line, coord) if phys == "X" else (coord, line)
+
+
+def build_job_network(
+    cfg: RailXConfig, mapping: MappingResult, alloc: JobAllocation
+) -> FlowNetwork:
+    """Node-granularity flow network of one job's reconfigured rails."""
+    net = FlowNetwork()
+    for phys in ("X", "Y"):
+        lines = alloc.rows if phys == "X" else alloc.cols
+        for spec, groups, (lo, hi) in _spec_groups(mapping, alloc, phys):
+            rails = hi - lo
+            for members in groups:
+                if spec.interconnect == "all_to_all":
+                    rings = all_to_all_rail_rings(spec.scale)
+                    for k in range(rails):
+                        ring = rings[k % len(rings)]
+                        order = [members[i] for i in ring]
+                        for i in range(len(order)):
+                            a, b = order[i], order[(i + 1) % len(order)]
+                            if a == b:
+                                continue
+                            for line in lines:
+                                net.add_link(
+                                    _vertex(phys, line, a),
+                                    _vertex(phys, line, b),
+                                    1.0,
+                                )
+                else:
+                    for i in range(len(members)):
+                        a, b = members[i], members[(i + 1) % len(members)]
+                        if a == b:
+                            continue
+                        for line in lines:
+                            net.add_link(
+                                _vertex(phys, line, a),
+                                _vertex(phys, line, b),
+                                float(rails),
+                            )
+    return net
+
+
+def estimate_goodput(
+    cfg: RailXConfig,
+    job: JobSpec,
+    mapping: MappingResult,
+    alloc: JobAllocation,
+    max_flow_nodes: int = 512,
+) -> float:
+    """Route the job's Table-4 traffic through the flow model.
+
+    Returns t_ideal / t_actual in (0, 1].  Allocations larger than
+    ``max_flow_nodes`` are evaluated on a trimmed representative
+    sub-rectangle (the wiring is translation-symmetric across lines, so
+    a single line per physical dimension captures the bottleneck).
+    """
+    vols = job_comm_volumes(job)           # bytes per iteration by dim name
+    if alloc.size > max_flow_nodes:
+        rows = alloc.rows[: max(1, max_flow_nodes // max(1, len(alloc.cols)))]
+        alloc = JobAllocation(rows, alloc.cols)
+    net = build_job_network(cfg, mapping, alloc)
+
+    demands: Dict[Tuple[Coord, Coord], float] = {}
+
+    def add_demand(a: Coord, b: Coord, v: float) -> None:
+        if a != b and v > 0:
+            demands[(a, b)] = demands.get((a, b), 0.0) + v
+
+    ideal_t = 0.0
+    port_bw = cfg.port_gbps * 1e9 / 8      # bytes/s, one direction
+    for phys in ("X", "Y"):
+        lines = alloc.rows if phys == "X" else alloc.cols
+        for spec, groups, (lo, hi) in _spec_groups(mapping, alloc, phys):
+            v = vols.get(spec.name, 0.0)
+            if v <= 0:
+                continue
+            rails = hi - lo
+            ideal_t += v / (2 * rails * port_bw)
+            for members in groups:
+                s = len(members)
+                for line in lines:
+                    if spec.interconnect == "all_to_all":
+                        per_pair = v / max(1, s - 1)
+                        for i, a in enumerate(members):
+                            for b in members[i + 1:]:
+                                add_demand(
+                                    _vertex(phys, line, a),
+                                    _vertex(phys, line, b),
+                                    per_pair,
+                                )
+                    else:
+                        # ring traffic split over both directions (each rail
+                        # is a +/- pair); ring all-reduce ~ 2(s-1)/s * V
+                        factor = 2.0 * (s - 1) / s if spec.name == "dp" else 1.0
+                        for i in range(s):
+                            a = _vertex(phys, line, members[i])
+                            b = _vertex(phys, line, members[(i + 1) % s])
+                            add_demand(a, b, v * factor / 2)
+                            add_demand(b, a, v * factor / 2)
+    if not demands or ideal_t <= 0:
+        return 1.0
+    load = route_demands_ecmp(net, demands)
+    util = max_utilization(net, load)      # bytes over unit-capacity links
+    if not math.isfinite(util) or util <= 0:
+        return 1.0
+    actual_t = util / port_bw              # bottleneck serialization seconds
+    if actual_t <= 0:
+        return 1.0
+    return max(1e-3, min(1.0, ideal_t / actual_t))
+
+
+# ---------------------------------------------------------------------------
+# Timeline accounting
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class JobRecord:
+    job: JobSpec
+    submit_t: float
+    start_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    nodes: int = 0
+    goodput: float = 1.0
+    reconfig_downtime_s: float = 0.0
+    migrations: int = 0
+    shrinks: int = 0
+
+    @property
+    def queueing_delay(self) -> Optional[float]:
+        return None if self.start_t is None else self.start_t - self.submit_t
+
+
+@dataclasses.dataclass
+class TimelineMetrics:
+    """Integrated cluster metrics maintained by the scheduler loop."""
+
+    grid_nodes: int
+    records: Dict[int, JobRecord] = dataclasses.field(default_factory=dict)
+    events_processed: int = 0
+    util_node_seconds: float = 0.0         # occupied node-seconds
+    healthy_node_seconds: float = 0.0      # healthy node-seconds
+    reconfig_rounds: int = 0
+    circuits_flipped: int = 0
+    total_downtime_s: float = 0.0
+    _last_t: float = 0.0
+    _occupied: int = 0
+    _healthy: int = 0
+
+    def advance(self, t: float) -> None:
+        dt = t - self._last_t
+        if dt > 0:
+            self.util_node_seconds += dt * self._occupied
+            self.healthy_node_seconds += dt * self._healthy
+            self._last_t = t
+
+    def set_occupancy(self, occupied: int, healthy: int) -> None:
+        self._occupied = occupied
+        self._healthy = healthy
+
+    @property
+    def utilization(self) -> float:
+        if self.healthy_node_seconds <= 0:
+            return 0.0
+        return self.util_node_seconds / self.healthy_node_seconds
+
+    def mean_queueing_delay(self) -> float:
+        delays = [
+            r.queueing_delay for r in self.records.values()
+            if r.queueing_delay is not None
+        ]
+        return sum(delays) / len(delays) if delays else 0.0
+
+    def mean_goodput(self) -> float:
+        g = [r.goodput for r in self.records.values() if r.start_t is not None]
+        return sum(g) / len(g) if g else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        finished = sum(1 for r in self.records.values() if r.finish_t is not None)
+        return {
+            "jobs": len(self.records),
+            "finished": finished,
+            "events": self.events_processed,
+            "utilization": round(self.utilization, 4),
+            "mean_queue_delay_s": round(self.mean_queueing_delay(), 3),
+            "mean_goodput": round(self.mean_goodput(), 4),
+            "reconfig_rounds": self.reconfig_rounds,
+            "circuits_flipped": self.circuits_flipped,
+            "reconfig_downtime_s": round(self.total_downtime_s, 4),
+        }

@@ -1,0 +1,134 @@
+"""Placement policies: fit a rows x cols rectangular job onto the free
+nodes of the RailX grid (paper §6.6 / Figure 20).
+
+The OCS constraint is per-job rectangularity over *subsets* of rows and
+columns — rows/cols need not be contiguous because circuit switching
+permutes node order freely.  A placement therefore is a ``JobAllocation``
+(row subset x column subset) fully contained in the free set.
+
+Policies:
+
+* ``first_fit``    — first rectangle found scanning rows by free count;
+* ``best_fit``     — among candidate rectangles, minimize the
+                     fragmentation score (free cells stranded in the
+                     chosen rows/columns that the job does not use);
+* ``rail_aware``   — reuse ``availability.allocate_multi_jobs``'s greedy
+                     rail packing to propose maximal sub-grids, then trim
+                     the first proposal that covers the request.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from ..core.availability import JobAllocation, allocate_multi_jobs
+
+Coord = Tuple[int, int]
+PlacementPolicy = Callable[[int, Set[Coord], int, int], Optional[JobAllocation]]
+
+
+def _rows_by_free(n: int, free: Set[Coord]) -> List[Tuple[int, FrozenSet[int]]]:
+    """(row, free-column-set) sorted by free count desc, row asc."""
+    per_row = []
+    for r in range(n):
+        cols = frozenset(c for c in range(n) if (r, c) in free)
+        if cols:
+            per_row.append((r, cols))
+    per_row.sort(key=lambda rc: (-len(rc[1]), rc[0]))
+    return per_row
+
+
+def _grow_from_seed(
+    per_row: Sequence[Tuple[int, FrozenSet[int]]],
+    seed_idx: int,
+    rows_req: int,
+    cols_req: int,
+) -> Optional[JobAllocation]:
+    """Greedy row accretion keeping the common free-column set >= cols_req."""
+    seed_row, seed_cols = per_row[seed_idx]
+    if len(seed_cols) < cols_req:
+        return None
+    rows = [seed_row]
+    cols = seed_cols
+    for i, (r, rcols) in enumerate(per_row):
+        if len(rows) == rows_req:
+            break
+        if i == seed_idx:
+            continue
+        new_cols = cols & rcols
+        if len(new_cols) >= cols_req:
+            rows.append(r)
+            cols = new_cols
+    if len(rows) < rows_req:
+        return None
+    chosen_cols = tuple(sorted(cols)[:cols_req])
+    return JobAllocation(tuple(sorted(rows)), chosen_cols)
+
+
+def first_fit(
+    n: int, free: Set[Coord], rows_req: int, cols_req: int
+) -> Optional[JobAllocation]:
+    per_row = _rows_by_free(n, free)
+    for seed in range(len(per_row)):
+        alloc = _grow_from_seed(per_row, seed, rows_req, cols_req)
+        if alloc is not None:
+            return alloc
+    return None
+
+
+def _fragmentation_score(
+    n: int, free: Set[Coord], alloc: JobAllocation
+) -> int:
+    """Free cells in the allocation's rows and columns that the job leaves
+    stranded — a proxy for how much future rectangular capacity this
+    placement destroys (rows/cols it touches can no longer host a clean
+    rectangle through those lines)."""
+    rows, cols = set(alloc.rows), set(alloc.cols)
+    stranded = 0
+    for (r, c) in free:
+        in_rows, in_cols = r in rows, c in cols
+        if in_rows != in_cols:  # crossed by the job's rows xor cols
+            stranded += 1
+    return stranded
+
+
+def best_fit(
+    n: int, free: Set[Coord], rows_req: int, cols_req: int
+) -> Optional[JobAllocation]:
+    per_row = _rows_by_free(n, free)
+    best: Optional[JobAllocation] = None
+    best_score = None
+    for seed in range(len(per_row)):
+        alloc = _grow_from_seed(per_row, seed, rows_req, cols_req)
+        if alloc is None:
+            continue
+        score = _fragmentation_score(n, free, alloc)
+        if best_score is None or score < best_score:
+            best, best_score = alloc, score
+    return best
+
+
+def rail_aware(
+    n: int, free: Set[Coord], rows_req: int, cols_req: int
+) -> Optional[JobAllocation]:
+    """Propose maximal healthy sub-grids with the Figure-20 greedy packer
+    (treating non-free nodes as faults), then trim the first that fits."""
+    occupied = [(r, c) for r in range(n) for c in range(n) if (r, c) not in free]
+    for prop in allocate_multi_jobs(n, occupied, max_jobs=8):
+        if len(prop.rows) >= rows_req and len(prop.cols) >= cols_req:
+            return JobAllocation(prop.rows[:rows_req], prop.cols[:cols_req])
+    return None
+
+
+POLICIES: Dict[str, PlacementPolicy] = {
+    "first_fit": first_fit,
+    "best_fit": best_fit,
+    "rail_aware": rail_aware,
+}
+
+
+def get_policy(name: str) -> PlacementPolicy:
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown placement policy {name!r}; have {list(POLICIES)}")

@@ -1,0 +1,333 @@
+"""MLaaS cluster scheduler for a RailX installation (paper §6.6, §7).
+
+Discrete-event loop over job-submit / job-finish / node-fail /
+node-recover events.  The scheduler owns:
+
+* the node grid (side = R/2 by default) with its fault set;
+* the global OCS circuit state, updated through ``reconfig`` patch plans
+  whose downtime is charged to the affected jobs' timelines;
+* a FIFO backlog served by a pluggable placement policy.
+
+Failure handling (§6.6): when a node inside a running job's rectangle
+fails, the scheduler tries, in order,
+
+1. **migrate** — re-place the same footprint on the surviving free
+   nodes (checkpoint-restore move; full reconfiguration cost);
+2. **shrink**  — elastic restart with the FFN/expert data-parallel
+   degree halved (the ``launch/elastic`` recovery semantics), as long as
+   the shrunken footprint stays >= ``job.min_nodes``;
+3. **requeue** — back to the backlog with its remaining work.
+
+Goodput: each placed job's Table-4 traffic is routed through
+``core.simulator``'s flow model on the job's reconfigured rail network;
+service time stretches by 1/goodput.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Literal, Optional, Set, Tuple
+
+from ..core.availability import JobAllocation
+from ..core.mapping import ParallelismPlan
+from ..core.topology import RailXConfig
+from .events import (
+    Coord,
+    Event,
+    EventQueue,
+    JobFinish,
+    JobSubmit,
+    NodeFail,
+    NodeRecover,
+)
+from .jobs import JobMapping, JobSpec, plan_job_mapping
+from .metrics import JobRecord, TimelineMetrics, estimate_goodput
+from .placement import PlacementPolicy, get_policy
+from .reconfig import (
+    CircuitMap,
+    ReconfigCostModel,
+    ReconfigPlan,
+    apply_plan,
+    diff_circuits,
+    job_target_circuits,
+    merge_circuits,
+    validate_job_reconfig,
+)
+
+
+@dataclasses.dataclass
+class RunningJob:
+    job: JobSpec
+    jmap: JobMapping
+    alloc: JobAllocation
+    circuits: CircuitMap
+    goodput: float
+    remaining_work_s: float       # seconds at goodput 1.0
+    resumed_t: float              # when the current run segment started
+    expected_finish: float
+
+
+class ClusterScheduler:
+    """Deterministic discrete-event MLaaS scheduler."""
+
+    def __init__(
+        self,
+        cfg: RailXConfig,
+        n: Optional[int] = None,
+        policy: str = "best_fit",
+        cost_model: Optional[ReconfigCostModel] = None,
+        goodput_model: Literal["flow", "none"] = "flow",
+        validate_circuits: bool = True,
+    ):
+        self.cfg = cfg
+        self.n = n if n is not None else cfg.nodes_per_side
+        if self.n > cfg.nodes_per_side:
+            raise ValueError(
+                f"grid side {self.n} exceeds R/2={cfg.nodes_per_side}"
+            )
+        self.policy_name = policy
+        self.policy: PlacementPolicy = get_policy(policy)
+        self.cost_model = cost_model or ReconfigCostModel()
+        self.goodput_model = goodput_model
+        self.validate_circuits = validate_circuits
+
+        self.faults: Set[Coord] = set()
+        self.running: Dict[int, RunningJob] = {}
+        self.backlog: List[JobSpec] = []
+        self.circuits: CircuitMap = {}
+        self.metrics = TimelineMetrics(grid_nodes=self.n * self.n)
+        self._queue = EventQueue()
+        self._jmap_cache: Dict[int, JobMapping] = {}
+
+    # -- state helpers ------------------------------------------------------
+
+    def free_nodes(self) -> Set[Coord]:
+        used: Set[Coord] = set(self.faults)
+        for rj in self.running.values():
+            for r in rj.alloc.rows:
+                for c in rj.alloc.cols:
+                    used.add((r, c))
+        return {
+            (r, c)
+            for r in range(self.n)
+            for c in range(self.n)
+            if (r, c) not in used
+        }
+
+    def occupied_nodes(self) -> int:
+        return sum(rj.alloc.size for rj in self.running.values())
+
+    def healthy_nodes(self) -> int:
+        return self.n * self.n - len(self.faults)
+
+    def _sync_occupancy(self) -> None:
+        self.metrics.set_occupancy(self.occupied_nodes(), self.healthy_nodes())
+
+    def _job_mapping(self, job: JobSpec) -> JobMapping:
+        if job.job_id not in self._jmap_cache:
+            self._jmap_cache[job.job_id] = plan_job_mapping(self.cfg, job)
+        return self._jmap_cache[job.job_id]
+
+    # -- reconfiguration ----------------------------------------------------
+
+    def _install(self, target: CircuitMap) -> Tuple[ReconfigPlan, float]:
+        """Patch the global circuit state to include ``target``; returns the
+        plan and its downtime."""
+        merged = merge_circuits(self.circuits, target)
+        plan = diff_circuits(self.circuits, merged)
+        self.circuits = apply_plan(self.circuits, plan)
+        dt = self.cost_model.downtime(plan)
+        if plan.patches:
+            self.metrics.reconfig_rounds += 1
+            self.metrics.circuits_flipped += plan.circuits_flipped
+            self.metrics.total_downtime_s += dt
+        return plan, dt
+
+    def _uninstall(self, target: CircuitMap) -> Tuple[ReconfigPlan, float]:
+        remaining: Dict = dict(self.circuits)
+        for k, v in target.items():
+            left = remaining.get(k, frozenset()) - v
+            if left:
+                remaining[k] = left
+            else:
+                remaining.pop(k, None)
+        plan = diff_circuits(self.circuits, remaining)
+        self.circuits = apply_plan(self.circuits, plan)
+        dt = self.cost_model.downtime(plan)
+        if plan.patches:
+            self.metrics.reconfig_rounds += 1
+            self.metrics.circuits_flipped += plan.circuits_flipped
+            self.metrics.total_downtime_s += dt
+        return plan, dt
+
+    # -- placement ----------------------------------------------------------
+
+    def _try_place(
+        self, job: JobSpec, t: float, jmap: Optional[JobMapping] = None,
+        remaining_work_s: Optional[float] = None,
+    ) -> bool:
+        jmap = jmap or self._job_mapping(job)
+        if jmap.nodes > self.n * self.n:
+            return False
+        alloc = self.policy(self.n, self.free_nodes(), jmap.rows_req, jmap.cols_req)
+        if alloc is None:
+            return False
+        target = job_target_circuits(self.cfg, jmap.mapping, alloc)
+        if self.validate_circuits:
+            validate_job_reconfig(self.cfg, jmap.mapping, alloc, target)
+        _, downtime = self._install(target)
+        if self.goodput_model == "flow":
+            g = estimate_goodput(self.cfg, job, jmap.mapping, alloc)
+        else:
+            g = 1.0
+        work = job.service_s if remaining_work_s is None else remaining_work_s
+        finish = t + downtime + work / g
+        self.running[job.job_id] = RunningJob(
+            job=job, jmap=jmap, alloc=alloc, circuits=target,
+            goodput=g, remaining_work_s=work, resumed_t=t + downtime,
+            expected_finish=finish,
+        )
+        rec = self.metrics.records[job.job_id]
+        if rec.start_t is None:
+            rec.start_t = t
+        rec.nodes = alloc.size
+        rec.goodput = g
+        rec.reconfig_downtime_s += downtime
+        self._queue.push(JobFinish(time=finish, job_id=job.job_id))
+        return True
+
+    def _drain_backlog(self, t: float) -> None:
+        placed_any = True
+        while placed_any:
+            placed_any = False
+            for job in list(self.backlog):
+                if self._try_place(job, t):
+                    self.backlog.remove(job)
+                    placed_any = True
+
+    # -- failure handling ---------------------------------------------------
+
+    def _shrunk_plan(self, plan: ParallelismPlan) -> Optional[ParallelismPlan]:
+        """Elastic shrink: halve the FFN/expert DP degree (launch/elastic
+        recovery semantics — the DP axis absorbs node loss)."""
+        if plan.dp >= 2 and plan.dp % 2 == 0:
+            return dataclasses.replace(plan, dp=plan.dp // 2)
+        if plan.cp >= 2 and plan.cp % 2 == 0:
+            return dataclasses.replace(plan, cp=plan.cp // 2)
+        return None
+
+    def _evict(self, rj: RunningJob, t: float) -> float:
+        """Tear the job off the fabric; returns remaining work seconds."""
+        elapsed = max(0.0, t - rj.resumed_t)
+        remaining = max(0.0, rj.remaining_work_s - elapsed * rj.goodput)
+        self._uninstall(rj.circuits)
+        del self.running[rj.job.job_id]
+        return remaining
+
+    def _handle_node_fail(self, ev: NodeFail) -> None:
+        self.faults.add(ev.node)
+        victim: Optional[RunningJob] = None
+        for rj in self.running.values():
+            if ev.node[0] in rj.alloc.rows and ev.node[1] in rj.alloc.cols:
+                victim = rj
+                break
+        if victim is None:
+            return
+        job = victim.job
+        remaining = self._evict(victim, ev.time)
+        rec = self.metrics.records[job.job_id]
+
+        # 1) migrate at full size
+        if self._try_place(job, ev.time, remaining_work_s=remaining):
+            rec.migrations += 1
+            self._drain_backlog(ev.time)  # eviction may have freed capacity
+            return
+        # 2) elastic shrink until the footprint fits (and >= min_nodes)
+        plan = job.plan
+        while True:
+            plan2 = self._shrunk_plan(plan)
+            if plan2 is None:
+                break
+            shrunk = dataclasses.replace(job, plan=plan2)
+            jmap = plan_job_mapping(self.cfg, shrunk)
+            if jmap.nodes < job.min_nodes:
+                break
+            # remaining work was measured with the original worker count:
+            # stretch by the full lost ratio, not just this halving step
+            stretch = (job.plan.dp * job.plan.cp) / (plan2.dp * plan2.cp)
+            if self._try_place(
+                shrunk, ev.time, jmap=jmap,
+                remaining_work_s=remaining * stretch,
+            ):
+                self._jmap_cache[job.job_id] = jmap
+                rec.shrinks += 1
+                rec.job = shrunk
+                self._drain_backlog(ev.time)  # shrink freed part of the rect
+                return
+            plan = plan2
+        # 3) requeue with remaining work; the eviction freed the rest of the
+        # rectangle, so offer it to the backlog immediately
+        requeued = dataclasses.replace(job, service_s=remaining)
+        self.backlog.insert(0, requeued)
+        self._drain_backlog(ev.time)
+
+    # -- event loop ---------------------------------------------------------
+
+    def _dispatch(self, ev: Event) -> None:
+        if isinstance(ev, JobSubmit):
+            job = ev.job
+            self.metrics.records.setdefault(
+                job.job_id, JobRecord(job=job, submit_t=ev.time)
+            )
+            if not self._try_place(job, ev.time):
+                self.backlog.append(job)
+        elif isinstance(ev, JobFinish):
+            rj = self.running.get(ev.job_id)
+            if rj is None or abs(rj.expected_finish - ev.time) > 1e-9:
+                return  # stale finish from before a migrate/shrink
+            self._uninstall(rj.circuits)
+            del self.running[ev.job_id]
+            self.metrics.records[ev.job_id].finish_t = ev.time
+            self._drain_backlog(ev.time)
+        elif isinstance(ev, NodeFail):
+            self._handle_node_fail(ev)
+        elif isinstance(ev, NodeRecover):
+            self.faults.discard(ev.node)
+            self._drain_backlog(ev.time)
+        else:  # pragma: no cover
+            raise TypeError(f"unknown event {ev!r}")
+
+    def run(
+        self, events: Iterable[Event] = (), until: Optional[float] = None
+    ) -> TimelineMetrics:
+        """Process events in time order; ``until`` stops the loop once the
+        next event lies beyond it (pending events stay queued, so ``run``
+        can be called again to continue)."""
+        for ev in events:
+            self._queue.push(ev)
+        self._sync_occupancy()
+        while self._queue:
+            next_t = self._queue.peek_time()
+            if until is not None and next_t is not None and next_t > until:
+                break
+            ev = self._queue.pop()
+            assert ev is not None
+            self.metrics.advance(ev.time)
+            self._dispatch(ev)
+            self._sync_occupancy()
+            self.metrics.events_processed += 1
+        return self.metrics
+
+    # -- rendering ----------------------------------------------------------
+
+    def render(self) -> str:
+        """ASCII grid: '.' free, 'X' fault, job ids mod 10 for occupancy."""
+        grid = [["." for _ in range(self.n)] for _ in range(self.n)]
+        for (r, c) in self.faults:
+            grid[r][c] = "X"
+        for rj in self.running.values():
+            ch = str(rj.job.job_id % 10)
+            for r in rj.alloc.rows:
+                for c in rj.alloc.cols:
+                    grid[r][c] = ch
+        return "\n".join(" ".join(row) for row in grid)

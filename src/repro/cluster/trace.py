@@ -1,0 +1,121 @@
+"""Trace generation for the MLaaS scheduler (paper §6.6 Figure 20).
+
+``poisson_trace`` draws job arrivals from a Poisson process over a mix
+of registry architectures (each with its default parallelism plan);
+``failure_trace`` injects node-fail / node-recover pairs with
+exponential inter-arrival and repair times; ``fig20_trace`` is the
+paper-style fixed scenario: several heterogeneous jobs arriving
+back-to-back onto a faulted grid.
+
+All randomness flows through one ``random.Random(seed)`` so a trace is a
+pure function of its arguments (the scheduler itself is deterministic).
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from ..core.mapping import ParallelismPlan
+from .events import Event, JobSubmit, NodeFail, NodeRecover
+from .jobs import JobSpec, default_plan, make_job
+
+DEFAULT_MIX: Tuple[str, ...] = (
+    "qwen3-8b",
+    "paper-llama3-moe",
+    "whisper-large-v3",
+    "llama3.2-3b",
+    "gemma3-4b",
+)
+
+
+def poisson_trace(
+    *,
+    seed: int = 0,
+    duration_s: float = 4 * 3600.0,
+    arrival_rate_per_h: float = 6.0,
+    archs: Sequence[str] = DEFAULT_MIX,
+    mean_service_s: float = 3600.0,
+    start_id: int = 0,
+) -> List[JobSubmit]:
+    """Poisson job arrivals with exponential service demands."""
+    rng = random.Random(seed)
+    t = 0.0
+    events: List[JobSubmit] = []
+    jid = start_id
+    while True:
+        t += rng.expovariate(arrival_rate_per_h / 3600.0)
+        if t >= duration_s:
+            break
+        arch = rng.choice(list(archs))
+        service = max(60.0, rng.expovariate(1.0 / mean_service_s))
+        events.append(
+            JobSubmit(time=t, job=make_job(jid, arch, service_s=service))
+        )
+        jid += 1
+    return events
+
+
+def failure_trace(
+    *,
+    n: int,
+    seed: int = 0,
+    duration_s: float = 4 * 3600.0,
+    mtbf_node_s: float = 1e7,
+    mttr_s: float = 1800.0,
+) -> List[Event]:
+    """Node failures over an n x n grid: cluster-level failure rate is
+    n^2 / mtbf_node_s; each failure schedules its recovery after an
+    exponential repair time."""
+    rng = random.Random(seed ^ 0x5DEECE66D)
+    events: List[Event] = []
+    t = 0.0
+    rate = n * n / mtbf_node_s
+    down: Dict[Tuple[int, int], float] = {}   # node -> repair time
+    while True:
+        t += rng.expovariate(rate)
+        if t >= duration_s:
+            break
+        # nodes whose repair has completed by now are eligible again
+        down = {nd: rt for nd, rt in down.items() if rt > t}
+        candidates = [
+            (r, c) for r in range(n) for c in range(n) if (r, c) not in down
+        ]
+        if not candidates:
+            continue
+        node = candidates[rng.randrange(len(candidates))]
+        events.append(NodeFail(time=t, node=node))
+        repair = t + max(60.0, rng.expovariate(1.0 / mttr_s))
+        down[node] = repair
+        if repair < duration_s:
+            events.append(NodeRecover(time=repair, node=node))
+    return events
+
+
+def fig20_trace(
+    *,
+    service_s: float = 7200.0,
+    archs: Sequence[str] = DEFAULT_MIX,
+    plans: Optional[Dict[str, ParallelismPlan]] = None,
+    stagger_s: float = 60.0,
+    start_id: int = 0,
+) -> List[JobSubmit]:
+    """Paper-style multi-job scenario: heterogeneous jobs submitted
+    back-to-back (Figure 20's co-resident training jobs)."""
+    plans = plans or {}
+    events = []
+    for i, arch in enumerate(archs):
+        plan = plans.get(arch, default_plan(arch))
+        events.append(
+            JobSubmit(
+                time=i * stagger_s,
+                job=make_job(start_id + i, arch, plan=plan, service_s=service_s),
+            )
+        )
+    return events
+
+
+def replay_trace(events: Iterable[Event]) -> List[Event]:
+    """Normalize an arbitrary event collection into time order (the
+    scheduler's queue re-sorts anyway; this keeps traces inspectable)."""
+    return sorted(events, key=lambda e: e.time)

@@ -29,6 +29,8 @@ import functools
 from typing import Optional, Sequence, Tuple, Union
 
 import jax
+
+from ..compat import axis_size, shard_map
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -42,7 +44,7 @@ def _axes_tuple(axes: AxisNames) -> Tuple[str, ...]:
 def _axis_size(axes: AxisNames) -> int:
     size = 1
     for a in _axes_tuple(axes):
-        size *= jax.lax.axis_size(a)
+        size *= axis_size(a)
     return size
 
 
@@ -115,7 +117,7 @@ def ring_all_reduce_2d(
     reduce-scattered along X then Y, half B along Y then X; then the
     mirrored all-gathers.  Models the X/Y simultaneous rings of [48, 98]."""
     ax, ay = axes_xy
-    group = 2 * jax.lax.axis_size(ax) * jax.lax.axis_size(ay)
+    group = 2 * axis_size(ax) * axis_size(ay)
     x, pad = _pad_to_multiple(x, group, scatter_dim)
     n = x.shape[scatter_dim]
     half = n // 2
@@ -178,7 +180,7 @@ def tree_hierarchical_all_reduce(
     the scatter dim is always divisible; pads then unpads)."""
     intra = 1
     for a in _axes_tuple(intra_axes):
-        intra *= jax.lax.axis_size(a)
+        intra *= axis_size(a)
 
     def red(g):
         shape = g.shape
@@ -222,7 +224,7 @@ def make_all_reduce_fn(
             return ring_all_reduce_2d(x, (ax[0], ax[1]))
         raise ValueError(schedule)
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         body, mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False
     )
     return jax.jit(mapped)

@@ -1,0 +1,64 @@
+"""JAX version compatibility shims.
+
+The repo targets the modern ``jax.shard_map`` / ``jax.sharding.AxisType``
+API (jax >= 0.5) but must also run on 0.4.x images where shard_map lives
+in ``jax.experimental.shard_map`` with the older keyword surface
+(``check_rep`` instead of ``check_vma``, ``auto`` instead of
+``axis_names``).  All shard_map call sites in the repo go through
+:func:`shard_map` below.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a (possibly tuple of) mesh axis inside shard_map.
+
+    ``jax.lax.axis_size`` on new jax; on 0.4.x ``jax.core.axis_frame``
+    returns the bound size directly.
+    """
+    new_as = getattr(jax.lax, "axis_size", None)
+    if new_as is not None:
+        return new_as(axis_name)
+    import jax.core as jcore
+
+    names = axis_name if isinstance(axis_name, (tuple, list)) else (axis_name,)
+    size = 1
+    for a in names:
+        size *= jcore.axis_frame(a)
+    return size
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool = True,
+    axis_names: Optional[frozenset] = None,
+) -> Callable:
+    """Dispatch to jax.shard_map (new) or jax.experimental.shard_map (0.4.x).
+
+    ``axis_names`` follows the new-API meaning: the mesh axes that are
+    *manual* inside the region (None = all of them).  On the old API this
+    is translated to ``auto`` = the complement.
+    """
+    new_sm = getattr(jax, "shard_map", None)
+    if new_sm is not None:
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return new_sm(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as old_sm
+
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return old_sm(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=check_vma, auto=auto)

@@ -25,6 +25,8 @@ from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+
+from ..compat import shard_map
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
@@ -275,7 +277,7 @@ def _flash_sharded(q, k, v, mesh, causal, window, scale, stub=False):
             return _stub_flash(q, k, v, causal, window, scale)
         return flash_attention(q, k, v, causal=causal, window=window, scale=scale)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec,
         check_vma=False,
     )(q, k, v)

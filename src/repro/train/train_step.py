@@ -27,6 +27,8 @@ import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
+
+from ..compat import shard_map
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -246,7 +248,7 @@ def make_train_step(
         lambda s: P(*(_keep_axes(s, manual_axes))), tree,
         is_leaf=lambda x: isinstance(x, P),
     )
-    mapped = jax.shard_map(
+    mapped = shard_map(
         body,
         mesh=mesh,
         in_specs=(no_dp(pspecs), no_dp(opt_specs), bspec),

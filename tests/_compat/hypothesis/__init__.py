@@ -1,0 +1,108 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` package.
+
+The real hypothesis cannot be installed in offline CI images, so
+``tests/conftest.py`` adds this package to ``sys.path`` when the import
+fails.  It implements only the surface the test-suite uses:
+
+  * ``given(*strategies)`` — runs the test with ``max_examples``
+    deterministic pseudo-random draws (seeded per test name, so runs are
+    reproducible);
+  * ``settings(max_examples=..., deadline=...)`` — composable in either
+    decorator order with ``given``;
+  * ``assume(cond)`` — discards the current example;
+  * ``strategies``: integers, floats, booleans, sampled_from, lists
+    (with ``unique=True``), tuples, just, plus ``.filter``/``.map``.
+
+This is NOT a property-based testing engine (no shrinking, no coverage
+guidance); it is a deterministic randomized sweep good enough to keep
+the property tests meaningful offline.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable
+
+from . import strategies  # noqa: F401  (re-export submodule)
+from .strategies import SearchStrategy
+
+__version__ = "0.0.0-offline-stub"
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition: Any) -> bool:
+    if not condition:
+        raise _UnsatisfiedAssumption()
+    return True
+
+
+class HealthCheck:  # referenced by some suites via settings(suppress_health_check=...)
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+
+    @classmethod
+    def all(cls):
+        return [cls.too_slow, cls.filter_too_much, cls.data_too_large]
+
+
+def settings(*args, max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **kwargs):
+    """Decorator recording the example budget; order-independent wrt given."""
+
+    def decorate(fn: Callable) -> Callable:
+        fn._hypothesis_settings = {"max_examples": max_examples}
+        return fn
+
+    if args and callable(args[0]):  # bare @settings usage
+        return decorate(args[0])
+    return decorate
+
+
+def given(*gargs: SearchStrategy, **gkwargs: SearchStrategy):
+    if gkwargs and gargs:
+        raise TypeError("stub given() supports all-positional or all-keyword strategies")
+
+    def decorate(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*call_args, **call_kwargs):
+            cfg = getattr(wrapper, "_hypothesis_settings", None) or getattr(
+                fn, "_hypothesis_settings", {}
+            )
+            budget = cfg.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(f"repro-hypothesis-stub:{fn.__module__}.{fn.__qualname__}")
+            ran = 0
+            attempts = 0
+            while ran < budget and attempts < budget * 50:
+                attempts += 1
+                try:
+                    if gkwargs:
+                        drawn = {k: s.example(rng) for k, s in gkwargs.items()}
+                        fn(*call_args, **call_kwargs, **drawn)
+                    else:
+                        drawn_args = tuple(s.example(rng) for s in gargs)
+                        fn(*call_args, *drawn_args, **call_kwargs)
+                except _UnsatisfiedAssumption:
+                    continue
+                except strategies.Unsatisfiable:
+                    continue
+                ran += 1
+            if ran == 0:
+                raise strategies.Unsatisfiable(
+                    f"could not generate any valid example for {fn.__qualname__}"
+                )
+
+        # pytest must not see the strategy-filled parameters as fixtures:
+        # drop the wrapped-function signature that functools.wraps copied.
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorate

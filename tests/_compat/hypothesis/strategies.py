@@ -1,0 +1,175 @@
+"""Strategy objects for the offline hypothesis stub (see package docstring)."""
+
+from __future__ import annotations
+
+import math
+import random
+from typing import Any, Callable, List, Optional, Sequence
+
+
+class Unsatisfiable(Exception):
+    """Raised when rejection sampling cannot produce a valid example."""
+
+
+class SearchStrategy:
+    """Base: a strategy is anything with ``example(rng)``."""
+
+    def example(self, rng: random.Random) -> Any:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        return _Filtered(self, pred)
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return _Mapped(self, fn)
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base: SearchStrategy, pred: Callable[[Any], bool]):
+        self.base, self.pred = base, pred
+
+    def example(self, rng: random.Random) -> Any:
+        for _ in range(1000):
+            v = self.base.example(rng)
+            if self.pred(v):
+                return v
+        raise Unsatisfiable("filter rejected 1000 consecutive draws")
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base: SearchStrategy, fn: Callable[[Any], Any]):
+        self.base, self.fn = base, fn
+
+    def example(self, rng: random.Random) -> Any:
+        return self.fn(self.base.example(rng))
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: Optional[int], max_value: Optional[int]):
+        self.lo = -(2 ** 31) if min_value is None else min_value
+        self.hi = 2 ** 31 if max_value is None else max_value
+
+    def example(self, rng: random.Random) -> int:
+        # bias toward boundaries, like real hypothesis
+        roll = rng.random()
+        if roll < 0.15:
+            return self.lo
+        if roll < 0.3:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: Optional[float], max_value: Optional[float]):
+        self.lo = -1e12 if min_value is None else float(min_value)
+        self.hi = 1e12 if max_value is None else float(max_value)
+
+    def example(self, rng: random.Random) -> float:
+        roll = rng.random()
+        if roll < 0.1:
+            return self.lo
+        if roll < 0.2:
+            return self.hi
+        # log-uniform when the range spans orders of magnitude and is positive
+        if self.lo > 0 and self.hi / self.lo > 1e3:
+            return math.exp(rng.uniform(math.log(self.lo), math.log(self.hi)))
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Booleans(SearchStrategy):
+    def example(self, rng: random.Random) -> bool:
+        return rng.random() < 0.5
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, options: Sequence[Any]):
+        self.options = list(options)
+        if not self.options:
+            raise ValueError("sampled_from requires a non-empty sequence")
+
+    def example(self, rng: random.Random) -> Any:
+        return rng.choice(self.options)
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value: Any):
+        self.value = value
+
+    def example(self, rng: random.Random) -> Any:
+        return self.value
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, parts: Sequence[SearchStrategy]):
+        self.parts = list(parts)
+
+    def example(self, rng: random.Random) -> tuple:
+        return tuple(p.example(rng) for p in self.parts)
+
+
+class _Lists(SearchStrategy):
+    def __init__(
+        self,
+        elements: SearchStrategy,
+        min_size: int = 0,
+        max_size: Optional[int] = None,
+        unique: bool = False,
+    ):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = 10 if max_size is None else max_size
+        self.unique = unique
+
+    def example(self, rng: random.Random) -> List[Any]:
+        size = rng.randint(self.min_size, self.max_size)
+        out: List[Any] = []
+        tries = 0
+        while len(out) < size and tries < 200:
+            tries += 1
+            v = self.elements.example(rng)
+            if self.unique and v in out:
+                continue
+            out.append(v)
+        if len(out) < self.min_size:
+            raise Unsatisfiable("could not build a unique list of min_size")
+        return out
+
+
+def integers(min_value: Optional[int] = None, max_value: Optional[int] = None) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(
+    min_value: Optional[float] = None,
+    max_value: Optional[float] = None,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+    width: int = 64,
+) -> SearchStrategy:
+    return _Floats(min_value, max_value)
+
+
+def booleans() -> SearchStrategy:
+    return _Booleans()
+
+
+def sampled_from(options: Sequence[Any]) -> SearchStrategy:
+    return _SampledFrom(options)
+
+
+def just(value: Any) -> SearchStrategy:
+    return _Just(value)
+
+
+def tuples(*parts: SearchStrategy) -> SearchStrategy:
+    return _Tuples(parts)
+
+
+def lists(
+    elements: SearchStrategy,
+    min_size: int = 0,
+    max_size: Optional[int] = None,
+    unique: bool = False,
+    unique_by: Optional[Callable[[Any], Any]] = None,
+) -> SearchStrategy:
+    return _Lists(elements, min_size=min_size, max_size=max_size, unique=unique or bool(unique_by))

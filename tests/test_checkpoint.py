@@ -121,7 +121,8 @@ ck.save({d!r}, 3, t)
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import checkpoint as ck
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh as _mk_mesh
+mesh = _mk_mesh((8,), ("data",))
 like = {{"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
 sh = {{"w": NamedSharding(mesh, P("data", None))}}
 t, _ = ck.restore({d!r}, like, shardings=sh)

@@ -1,0 +1,208 @@
+"""repro.cluster: MLaaS scheduler + OCS reconfiguration engine (ISSUE 1).
+
+Covers the acceptance invariants:
+  * placements never overlap each other, faulted nodes, or the grid edge;
+  * reconfiguration plans are involutive (apply + revert = identity) and
+    install/uninstall round-trips leave the fabric empty;
+  * a Figure-20-style multi-job trace reaches utilization >= the
+    single-job ``max_single_allocation`` baseline on the same faulted grid;
+  * the event loop is deterministic under a fixed RNG seed;
+  * circuit validation enforces the core.topology ring/all-to-all
+    invariants.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.cluster import (
+    ClusterScheduler,
+    JobSubmit,
+    NodeFail,
+    ReconfigCostModel,
+    apply_plan,
+    diff_circuits,
+    fig20_trace,
+    failure_trace,
+    job_target_circuits,
+    make_job,
+    plan_job_mapping,
+    poisson_trace,
+    validate_job_reconfig,
+)
+from repro.cluster.reconfig import merge_circuits
+from repro.core.availability import JobAllocation, max_single_allocation
+from repro.core.mapping import ParallelismPlan
+from repro.core.topology import RailXConfig
+
+CFG = RailXConfig(m=4, n=4, R=64)  # 32x32 node grid max; tests use sub-grids
+
+
+class CheckedScheduler(ClusterScheduler):
+    """Asserts placement invariants after every event."""
+
+    def _dispatch(self, ev):
+        super()._dispatch(ev)
+        seen = {}
+        for jid, rj in self.running.items():
+            assert all(0 <= r < self.n for r in rj.alloc.rows), (jid, rj.alloc)
+            assert all(0 <= c < self.n for c in rj.alloc.cols), (jid, rj.alloc)
+            for r in rj.alloc.rows:
+                for c in rj.alloc.cols:
+                    assert (r, c) not in self.faults, (
+                        f"job {jid} occupies faulted node {(r, c)}"
+                    )
+                    assert (r, c) not in seen, (
+                        f"jobs {seen[(r, c)]} and {jid} overlap at {(r, c)}"
+                    )
+                    seen[(r, c)] = jid
+
+
+def test_placement_never_overlaps_faults_or_jobs():
+    events = list(poisson_trace(seed=3, duration_s=4 * 3600.0,
+                                arrival_rate_per_h=8.0, mean_service_s=1800.0))
+    events += failure_trace(n=16, seed=3, duration_s=4 * 3600.0,
+                            mtbf_node_s=2e5, mttr_s=900.0)
+    sched = CheckedScheduler(CFG, n=16, policy="first_fit")
+    m = sched.run(events)
+    assert m.events_processed >= len(events)
+    assert m.records  # some jobs were submitted
+
+
+def test_reconfig_plans_are_involutive():
+    job = make_job(0, "paper-llama3-moe")  # exercises the all-to-all path
+    jm = plan_job_mapping(CFG, job)
+    alloc = JobAllocation(tuple(range(jm.rows_req)), tuple(range(jm.cols_req)))
+    target = job_target_circuits(CFG, jm.mapping, alloc)
+    plan = diff_circuits({}, target)
+    state = apply_plan({}, plan)
+    assert state == target
+    assert apply_plan(state, plan.inverted()) == {}
+    # double inversion is the original plan
+    assert plan.inverted().inverted() == plan
+    # cost model: empty plan is free, real plan is not
+    cost = ReconfigCostModel()
+    assert cost.downtime(diff_circuits(target, target)) == 0.0
+    assert cost.downtime(plan) > 0.0
+
+
+def test_install_uninstall_roundtrip_leaves_fabric_empty():
+    jobs = [make_job(0, "qwen3-8b"), make_job(1, "llama3.2-3b")]
+    targets = []
+    state = {}
+    for i, job in enumerate(jobs):
+        jm = plan_job_mapping(CFG, job)
+        rows = tuple(range(4 * i, 4 * i + jm.rows_req))
+        cols = tuple(range(jm.cols_req))
+        tgt = job_target_circuits(CFG, jm.mapping, JobAllocation(rows, cols))
+        plan = diff_circuits(state, merge_circuits(state, tgt))
+        state = apply_plan(state, plan)
+        targets.append((tgt, plan))
+    # uninstall in reverse order
+    for tgt, plan in reversed(targets):
+        state = apply_plan(state, plan.inverted())
+    assert state == {}
+
+
+def test_multi_job_utilization_beats_single_job_baseline():
+    n = 16
+    faults = [(1, 2), (4, 5), (6, 1), (1, 6)]
+    single = max_single_allocation(n, faults)
+    plan = ParallelismPlan(tp=8, cp=2, ep=1, dp=4, pp=2)  # 2x8-node footprint
+    events = [NodeFail(time=0.0, node=f) for f in faults]
+    events += [
+        JobSubmit(time=1.0 + i, job=make_job(i, "qwen3-8b", plan=plan,
+                                             service_s=1e6))
+        for i in range(20)
+    ]
+    sched = ClusterScheduler(CFG, n=n, policy="best_fit")
+    sched.run(events, until=100.0)
+    assert sched.occupied_nodes() >= single, (
+        f"multi-job packing {sched.occupied_nodes()} < single-job {single}"
+    )
+
+
+def test_event_loop_is_deterministic():
+    def one_run():
+        events = list(poisson_trace(seed=11, duration_s=2 * 3600.0,
+                                    arrival_rate_per_h=10.0,
+                                    mean_service_s=1200.0))
+        events += failure_trace(n=12, seed=11, duration_s=2 * 3600.0,
+                                mtbf_node_s=3e5, mttr_s=600.0)
+        sched = ClusterScheduler(CFG, n=12, policy="best_fit")
+        m = sched.run(events)
+        fingerprint = [
+            (jid, r.start_t, r.finish_t, r.nodes, r.migrations, r.shrinks)
+            for jid, r in sorted(m.records.items())
+        ]
+        return m.summary(), fingerprint
+
+    s1, f1 = one_run()
+    s2, f2 = one_run()
+    assert s1 == s2
+    assert f1 == f2
+
+
+def test_fig20_trace_runs_all_archs():
+    sched = ClusterScheduler(CFG, n=16, policy="rail_aware")
+    m = sched.run(fig20_trace(service_s=600.0))
+    assert m.summary()["finished"] == 5
+    assert 0.0 < m.mean_goodput() <= 1.0
+    for r in m.records.values():
+        assert r.finish_t is not None
+        assert r.reconfig_downtime_s > 0.0  # every placement reprogrammed OCSes
+
+
+def test_validation_catches_broken_rings():
+    job = make_job(0, "qwen3-8b")
+    jm = plan_job_mapping(CFG, job)
+    alloc = JobAllocation(tuple(range(jm.rows_req)), tuple(range(jm.cols_req)))
+    target = job_target_circuits(CFG, jm.mapping, alloc)
+    validate_job_reconfig(CFG, jm.mapping, alloc, target)  # intact: ok
+    key = sorted(target)[0]
+    broken = dict(target)
+    pairs = sorted(broken[key])
+    broken[key] = frozenset(pairs[1:])  # snip one circuit: open chain
+    with pytest.raises(ValueError):
+        validate_job_reconfig(CFG, jm.mapping, alloc, broken)
+
+
+def test_shrink_preserves_work_and_floor():
+    # one job on a tight grid; failing one of its nodes with no room to
+    # migrate forces the elastic shrink path
+    plan = ParallelismPlan(tp=8, cp=2, ep=1, dp=4, pp=2)  # 2x8 on an 8-grid
+    job = make_job(0, "qwen3-8b", plan=plan, service_s=3600.0, min_nodes=4)
+    sched = ClusterScheduler(CFG, n=8, policy="first_fit")
+    sched.run([JobSubmit(time=0.0, job=job)], until=0.0)
+    assert 0 in sched.running
+    alloc = sched.running[0].alloc
+    # fail every row outside the job so migration cannot succeed, then one
+    # of the job's own nodes
+    events = []
+    t = 1.0
+    for r in range(8):
+        if r not in alloc.rows:
+            for c in range(8):
+                events.append(NodeFail(time=t, node=(r, c)))
+    events.append(NodeFail(time=2.0, node=(alloc.rows[0], alloc.cols[0])))
+    m = sched.run(events, until=3.0)
+    rec = m.records[0]
+    assert rec.shrinks >= 1 or rec.migrations >= 1 or sched.backlog
+    if rec.shrinks:
+        assert sched.running[0].alloc.size >= job.min_nodes
+
+
+def test_queueing_delay_accrues_when_grid_full():
+    # 8x8 grid, three 4x8 jobs: two fit concurrently, the third must wait
+    # for a finish and records a positive queueing delay
+    plan = ParallelismPlan(tp=8, cp=4, ep=1, dp=4, pp=2)  # 4x8 nodes
+    events = [
+        JobSubmit(time=float(i), job=make_job(i, "qwen3-8b", plan=plan,
+                                              service_s=500.0))
+        for i in range(3)
+    ]
+    sched = ClusterScheduler(CFG, n=8, policy="first_fit")
+    m = sched.run(events)
+    delays = {jid: r.queueing_delay for jid, r in m.records.items()}
+    assert delays[0] == 0.0 and delays[1] == 0.0
+    assert delays[2] is not None and delays[2] > 100.0, delays

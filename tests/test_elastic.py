@@ -47,8 +47,8 @@ def test_moe_token_scatter_matches_dense():
 import jax, jax.numpy as jnp
 from repro.models.moe import MoEConfig, init_moe, moe_ffn_dense, moe_ffn_ep
 from repro.models.common import DTypes
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh as _mk_mesh
+mesh = _mk_mesh((2, 4), ("data", "model"))
 dt = DTypes()
 cfg = MoEConfig(d_model=32, d_ff=16, num_experts=8, top_k=2,
                 capacity_factor=8.0, token_scatter=True)
