@@ -1,19 +1,28 @@
 """Cluster scheduler benchmark — emits ``BENCH_cluster.json``.
 
-Measures, at 32x32 and 64x64 node grids:
+Measures, at 32x32, 64x64 and 128x128 node grids:
 
 * ``events_per_sec_loop``  — raw scheduler event-loop rate (circuit
   validation and flow-model goodput off): the pure discrete-event cost;
 * ``events_per_sec_full``  — end-to-end rate with OCS validation and
   flow-model goodput on (what the example runs);
 * ``mean_goodput`` / ``utilization`` — trace quality figures from the
-  full run, so later PRs can track perf without regressing fidelity.
+  full run, so later PRs can track perf without regressing fidelity;
+* ``placement_attempts`` / ``placement_scans`` / ``*_cache_hits`` —
+  how much work the occupancy watermark and the shape-memoized
+  circuit/goodput caches are saving.
 
-  PYTHONPATH=src python benchmarks/bench_cluster.py
+  PYTHONPATH=src python benchmarks/bench_cluster.py            # full run
+  PYTHONPATH=src python benchmarks/bench_cluster.py --smoke    # CI: 16x16
+
+``--smoke`` runs a 16x16 grid in a few seconds, checks basic trace
+invariants, and does NOT rewrite BENCH_cluster.json — it exists so CI can
+catch perf-affecting regressions (a hung loop, a broken cache) quickly.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -22,6 +31,9 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_cluster.json")
+
+FULL_SIDES = (32, 64, 128)
+SMOKE_SIDES = (16,)
 
 
 def run_grid(side: int, full: bool) -> dict:
@@ -60,12 +72,16 @@ def run_grid(side: int, full: bool) -> dict:
         "mean_goodput": s["mean_goodput"],
         "reconfig_rounds": s["reconfig_rounds"],
         "circuits_flipped": s["circuits_flipped"],
+        "placement_attempts": s["placement_attempts"],
+        "placement_scans": s["placement_scans"],
+        "circuit_cache_hits": s["circuit_cache_hits"],
+        "goodput_cache_hits": s["goodput_cache_hits"],
     }
 
 
-def main() -> None:
+def bench(sides) -> list:
     rows = []
-    for side in (32, 64):
+    for side in sides:
         for full in (False, True):
             row = run_grid(side, full)
             rows.append(row)
@@ -73,8 +89,32 @@ def main() -> None:
                 f"bench_cluster_{row['grid']}_{row['mode']},"
                 f"{1e6 / max(row['events_per_sec'], 1e-9):.1f},"
                 f"evps={row['events_per_sec']};goodput={row['mean_goodput']};"
-                f"util={row['utilization']}"
+                f"util={row['utilization']};scans={row['placement_scans']}"
+                f"/{row['placement_attempts']}"
             )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="quick 16x16 sanity run for CI; does not write BENCH_cluster.json",
+    )
+    args = ap.parse_args()
+
+    if args.smoke:
+        rows = bench(SMOKE_SIDES)
+        for row in rows:
+            assert row["events"] > 0, row
+            assert row["finished"] > 0, f"no jobs finished: {row}"
+            assert row["reconfig_rounds"] > 0, f"no reconfigurations: {row}"
+        full_row = next(r for r in rows if r["mode"] == "full")
+        assert 0.0 < full_row["mean_goodput"] <= 1.0, full_row
+        print("smoke ok")
+        return
+
+    rows = bench(FULL_SIDES)
     with open(OUT, "w") as f:
         json.dump({"bench": "cluster", "rows": rows}, f, indent=2)
     print(f"wrote {os.path.relpath(OUT)}")

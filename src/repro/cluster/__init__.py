@@ -6,6 +6,39 @@ simulation of *operating* a RailX installation: multiple training jobs
 with different shapes and parallelism strategies share one
 reconfigurable fabric; failures are worked around by re-programming the
 OCS layer (paper §6.6, §7).
+
+Performance notes (the event loop scales to 128x128 node grids)
+---------------------------------------------------------------
+
+The hot state is incrementally maintained; nothing global is rebuilt per
+event.  The invariants each structure maintains:
+
+* **Occupancy index** (``occupancy.OccupancyIndex``): per-row integer
+  bitmasks of occupied and faulted columns, updated in O(footprint) on
+  place/evict/fault/recover.  A cell is free iff neither bit is set;
+  ``free_count`` always equals the popcount over all rows; ``version``
+  increments on every mutation, so equal versions imply *identical* free
+  sets.  The placement policies (``placement``) run on these masks
+  (popcount + AND) and are property-tested identical to the original
+  frozenset implementations (``placement.REFERENCE_POLICIES``).
+* **Touched-key circuit deltas** (``scheduler._install/_uninstall``):
+  installing or uninstalling a job diffs only the switch keys in the
+  job's own target and keeps per-switch circuit refcounts, so the cost
+  is O(|job target|) regardless of how many circuits the rest of the
+  fabric holds.  Plans produced are byte-identical to a full-map diff
+  because a job's target never names switches it does not touch.
+* **Shape-memoized synthesis** (``reconfig.CircuitShapeCache``,
+  ``metrics.GoodputCache``): circuit targets, their validation, and the
+  flow-model goodput depend on the allocation only through its shape
+  (row/col counts) for a fixed mapping — coordinates enter as an
+  order-preserving relabel.  One canonical synthesis/validation/routing
+  per (mapping, shape) key; hits pay an O(|circuits|) relabel (circuits)
+  or O(1) lookup (goodput).
+* **Backlog watermark** (``scheduler._drain_backlog``): each backlogged
+  job remembers the occupancy ``version`` of its last failed placement;
+  it is re-attempted only after the free set changes (deterministic
+  policies re-fail on an identical free set), and ``can_fit`` gates the
+  policy scan with an O(n) row-popcount necessary condition.
 """
 
 from .events import (
@@ -24,37 +57,53 @@ from .jobs import (
     model_spec_from_config,
     plan_job_mapping,
 )
-from .metrics import TimelineMetrics, estimate_goodput
-from .placement import POLICIES, best_fit, first_fit, get_policy, rail_aware
+from .metrics import GoodputCache, TimelineMetrics, estimate_goodput
+from .occupancy import OccupancyIndex
+from .placement import (
+    POLICIES,
+    REFERENCE_POLICIES,
+    best_fit,
+    first_fit,
+    get_policy,
+    rail_aware,
+)
 from .reconfig import (
+    CircuitShapeCache,
     ReconfigCostModel,
     ReconfigPlan,
     SwitchPatch,
     apply_plan,
+    canonical_allocation,
     diff_circuits,
     job_target_circuits,
+    relabel_circuits,
     validate_job_reconfig,
 )
 from .scheduler import ClusterScheduler
 from .trace import fig20_trace, failure_trace, poisson_trace, replay_trace
 
 __all__ = [
+    "CircuitShapeCache",
     "ClusterScheduler",
     "Event",
     "EventQueue",
+    "GoodputCache",
     "JobFinish",
     "JobMapping",
     "JobSpec",
     "JobSubmit",
     "NodeFail",
     "NodeRecover",
+    "OccupancyIndex",
     "POLICIES",
+    "REFERENCE_POLICIES",
     "ReconfigCostModel",
     "ReconfigPlan",
     "SwitchPatch",
     "TimelineMetrics",
     "apply_plan",
     "best_fit",
+    "canonical_allocation",
     "default_plan",
     "diff_circuits",
     "estimate_goodput",
@@ -68,6 +117,7 @@ __all__ = [
     "plan_job_mapping",
     "poisson_trace",
     "rail_aware",
+    "relabel_circuits",
     "replay_trace",
     "validate_job_reconfig",
 ]

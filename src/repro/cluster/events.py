@@ -26,8 +26,19 @@ class JobSubmit:
 
 @dataclasses.dataclass(frozen=True)
 class JobFinish:
+    """Completion of one run segment of a job.
+
+    ``epoch`` is the job's run-segment counter at scheduling time: every
+    placement (initial, migrate, shrink, requeue-replace) starts a new
+    segment, so a finish is current iff its epoch matches the running
+    job's.  This replaces the fragile float comparison of expected-finish
+    timestamps (service times stretched by goodput ratios accumulate
+    rounding error).
+    """
+
     time: float
     job_id: int
+    epoch: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

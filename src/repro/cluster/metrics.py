@@ -105,8 +105,14 @@ def estimate_goodput(
     """
     vols = job_comm_volumes(job)           # bytes per iteration by dim name
     if alloc.size > max_flow_nodes:
-        rows = alloc.rows[: max(1, max_flow_nodes // max(1, len(alloc.cols)))]
-        alloc = JobAllocation(rows, alloc.cols)
+        # rows are replicated "lines" for the X specs but ring *members*
+        # for the Y specs: never trim below the Y split's required extent
+        # or whole subgroups (and their traffic) silently vanish
+        need_y = math.prod(
+            s.scale for s in mapping.specs if s.phys == "Y"
+        )
+        keep = max(1, need_y, max_flow_nodes // max(1, len(alloc.cols)))
+        alloc = JobAllocation(alloc.rows[:keep], alloc.cols)
     net = build_job_network(cfg, mapping, alloc)
 
     demands: Dict[Tuple[Coord, Coord], float] = {}
@@ -158,6 +164,42 @@ def estimate_goodput(
     return max(1e-3, min(1.0, ideal_t / actual_t))
 
 
+class GoodputCache:
+    """Memoizes ``estimate_goodput`` by (job signature, allocation shape).
+
+    The flow network built by ``build_job_network`` and the ECMP routing
+    over it are isomorphic under an order-preserving relabel of the
+    allocation's rows/columns: the construction loops iterate coordinates
+    in sorted order, so demands, adjacency insertion order, BFS visit
+    order and float accumulation order all map 1:1.  The bottleneck
+    utilization — hence the goodput scalar — is therefore bit-identical
+    for any two same-shape allocations of the same job signature, and one
+    routing per (arch, plan, shape, rows, cols) key suffices.
+    """
+
+    def __init__(self, cfg: RailXConfig):
+        self.cfg = cfg
+        self._cache: Dict[Tuple[object, ...], float] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def goodput_for(
+        self, job: JobSpec, mapping: MappingResult, alloc: JobAllocation
+    ) -> float:
+        key = (
+            job.arch, job.plan, job.shape, mapping,
+            len(alloc.rows), len(alloc.cols),
+        )
+        g = self._cache.get(key)
+        if g is None:
+            self.misses += 1
+            g = estimate_goodput(self.cfg, job, mapping, alloc)
+            self._cache[key] = g
+        else:
+            self.hits += 1
+        return g
+
+
 # ---------------------------------------------------------------------------
 # Timeline accounting
 # ---------------------------------------------------------------------------
@@ -192,6 +234,12 @@ class TimelineMetrics:
     reconfig_rounds: int = 0
     circuits_flipped: int = 0
     total_downtime_s: float = 0.0
+    placement_attempts: int = 0            # _try_place calls (incl. gated-out)
+    placement_scans: int = 0               # attempts that ran a policy scan
+    circuit_cache_hits: int = 0
+    circuit_cache_misses: int = 0
+    goodput_cache_hits: int = 0
+    goodput_cache_misses: int = 0
     _last_t: float = 0.0
     _occupied: int = 0
     _healthy: int = 0
@@ -236,4 +284,8 @@ class TimelineMetrics:
             "reconfig_rounds": self.reconfig_rounds,
             "circuits_flipped": self.circuits_flipped,
             "reconfig_downtime_s": round(self.total_downtime_s, 4),
+            "placement_attempts": self.placement_attempts,
+            "placement_scans": self.placement_scans,
+            "circuit_cache_hits": self.circuit_cache_hits,
+            "goodput_cache_hits": self.goodput_cache_hits,
         }

@@ -1,0 +1,158 @@
+"""Incremental occupancy index for the cluster scheduler's node grid.
+
+``ClusterScheduler.free_nodes()`` used to rebuild an O(n^2) coordinate
+set on every placement attempt; at 64x64 that one helper dominated the
+event loop (see BENCH_cluster.json history).  ``OccupancyIndex`` keeps
+the same information as two per-row integer bitmasks — occupied columns
+and faulted columns — updated in O(footprint) on place / evict / fault /
+recover, so the free set for a row is a single ``full & ~(occ | fault)``
+expression and popcounts replace set cardinalities.
+
+Invariants (checked by the property tests in ``tests/test_occupancy.py``):
+
+* a cell is free iff it is neither occupied nor faulted; ``free_count``
+  always equals the popcount of all free-row masks;
+* occupied and faulted are tracked independently, so a node may be both
+  (a fault inside a running job's rectangle, between the fault event and
+  the eviction) without corrupting the index;
+* ``version`` increments on every mutation.  Two observations with the
+  same version saw the *identical* free set, which is what lets the
+  scheduler skip re-running a deterministic placement policy that
+  already failed (the backlog watermark gate).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List, Sequence, Set, Tuple
+
+Coord = Tuple[int, int]
+
+
+def iter_bits(mask: int) -> Iterable[int]:
+    """Yield the set bit positions of ``mask`` in ascending order."""
+    while mask:
+        low = mask & -mask
+        yield low.bit_length() - 1
+        mask ^= low
+
+
+def lowest_bits(mask: int, k: int) -> Tuple[int, ...]:
+    """The ``k`` lowest set bit positions of ``mask`` (== sorted(bits)[:k])."""
+    out: List[int] = []
+    while mask and len(out) < k:
+        low = mask & -mask
+        out.append(low.bit_length() - 1)
+        mask ^= low
+    return tuple(out)
+
+
+def mask_of(cols: Sequence[int]) -> int:
+    m = 0
+    for c in cols:
+        m |= 1 << c
+    return m
+
+
+class OccupancyIndex:
+    """Per-row bitmask view of an ``n x n`` node grid."""
+
+    __slots__ = ("n", "full", "_occ", "_fault", "version", "free_count")
+
+    def __init__(self, n: int):
+        self.n = n
+        self.full = (1 << n) - 1
+        self._occ: List[int] = [0] * n
+        self._fault: List[int] = [0] * n
+        self.version = 0
+        self.free_count = n * n
+
+    # -- queries ------------------------------------------------------------
+
+    def free_row(self, r: int) -> int:
+        """Bitmask of free columns in row ``r``."""
+        return self.full & ~(self._occ[r] | self._fault[r])
+
+    def is_free(self, node: Coord) -> bool:
+        r, c = node
+        return bool(self.free_row(r) & (1 << c))
+
+    def free_set(self) -> Set[Coord]:
+        """Materialize the free set (compatibility / test helper; O(n^2))."""
+        out: Set[Coord] = set()
+        for r in range(self.n):
+            for c in iter_bits(self.free_row(r)):
+                out.add((r, c))
+        return out
+
+    def occupied_list(self) -> List[Coord]:
+        """Non-free cells in row-major order (what ``rail_aware`` feeds to
+        ``allocate_multi_jobs`` as synthetic faults)."""
+        out: List[Coord] = []
+        for r in range(self.n):
+            unfree = self.full & ~self.free_row(r)
+            for c in iter_bits(unfree):
+                out.append((r, c))
+        return out
+
+    def can_fit(self, rows_req: int, cols_req: int) -> bool:
+        """Necessary condition for any ``rows_req x cols_req`` rectangle:
+        at least ``rows_req`` rows each holding >= ``cols_req`` free cells.
+        O(n); a sound pre-filter for every placement policy."""
+        if rows_req * cols_req > self.free_count:
+            return False
+        have = 0
+        for r in range(self.n):
+            if self.free_row(r).bit_count() >= cols_req:
+                have += 1
+                if have >= rows_req:
+                    return True
+        return False
+
+    # -- mutations (all O(footprint), all bump ``version``) -----------------
+
+    def occupy(self, rows: Sequence[int], cols: Sequence[int]) -> None:
+        cmask = mask_of(cols)
+        for r in rows:
+            newly = cmask & ~self._occ[r] & ~self._fault[r]
+            self.free_count -= newly.bit_count()
+            self._occ[r] |= cmask
+        self.version += 1
+
+    def release(self, rows: Sequence[int], cols: Sequence[int]) -> None:
+        cmask = mask_of(cols)
+        for r in rows:
+            newly = cmask & self._occ[r] & ~self._fault[r]
+            self.free_count += newly.bit_count()
+            self._occ[r] &= ~cmask
+        self.version += 1
+
+    def fault(self, node: Coord) -> None:
+        r, c = node
+        bit = 1 << c
+        if not self._fault[r] & bit:
+            if not self._occ[r] & bit:
+                self.free_count -= 1
+            self._fault[r] |= bit
+        self.version += 1
+
+    def recover(self, node: Coord) -> None:
+        r, c = node
+        bit = 1 << c
+        if self._fault[r] & bit:
+            self._fault[r] &= ~bit
+            if not self._occ[r] & bit:
+                self.free_count += 1
+        self.version += 1
+
+    # -- construction helpers ----------------------------------------------
+
+    @classmethod
+    def from_free_set(cls, n: int, free: Set[Coord]) -> "OccupancyIndex":
+        """Index whose free set equals ``free`` (everything else occupied)."""
+        idx = cls(n)
+        for r in range(n):
+            miss = idx.full & ~mask_of([c for c in range(n) if (r, c) in free])
+            if miss:
+                idx.free_count -= miss.bit_count()
+                idx._occ[r] = miss
+        return idx

@@ -15,6 +15,14 @@ Policies:
 * ``rail_aware``   — reuse ``availability.allocate_multi_jobs``'s greedy
                      rail packing to propose maximal sub-grids, then trim
                      the first proposal that covers the request.
+
+All three operate on the scheduler's ``OccupancyIndex`` — per-row integer
+bitmasks where intersection is ``&`` and cardinality is ``int.bit_count``
+— instead of frozenset algebra over an O(n^2) coordinate set.  The
+original set-based implementations are kept below as ``*_ref``; the
+property tests in ``tests/test_occupancy.py`` assert the bitmask policies
+return *identical* allocations on randomized grids, so swapping the
+representation cannot change scheduling decisions.
 """
 
 from __future__ import annotations
@@ -22,13 +30,118 @@ from __future__ import annotations
 from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
 from ..core.availability import JobAllocation, allocate_multi_jobs
+from .occupancy import OccupancyIndex, lowest_bits, mask_of
 
 Coord = Tuple[int, int]
-PlacementPolicy = Callable[[int, Set[Coord], int, int], Optional[JobAllocation]]
+PlacementPolicy = Callable[[int, OccupancyIndex, int, int], Optional[JobAllocation]]
 
 
-def _rows_by_free(n: int, free: Set[Coord]) -> List[Tuple[int, FrozenSet[int]]]:
-    """(row, free-column-set) sorted by free count desc, row asc."""
+# ---------------------------------------------------------------------------
+# Bitmask policies (the registry entries the scheduler uses)
+# ---------------------------------------------------------------------------
+
+
+def _rows_by_free(n: int, occ: OccupancyIndex) -> List[Tuple[int, int]]:
+    """(row, free-column-mask) sorted by free count desc, row asc."""
+    per_row = []
+    for r in range(n):
+        mask = occ.free_row(r)
+        if mask:
+            per_row.append((r, mask))
+    per_row.sort(key=lambda rm: (-rm[1].bit_count(), rm[0]))
+    return per_row
+
+
+def _grow_from_seed(
+    per_row: Sequence[Tuple[int, int]],
+    seed_idx: int,
+    rows_req: int,
+    cols_req: int,
+) -> Optional[JobAllocation]:
+    """Greedy row accretion keeping the common free-column mask >= cols_req."""
+    seed_row, seed_cols = per_row[seed_idx]
+    if seed_cols.bit_count() < cols_req:
+        return None
+    rows = [seed_row]
+    cols = seed_cols
+    for i, (r, rcols) in enumerate(per_row):
+        if len(rows) == rows_req:
+            break
+        if i == seed_idx:
+            continue
+        new_cols = cols & rcols
+        if new_cols.bit_count() >= cols_req:
+            rows.append(r)
+            cols = new_cols
+    if len(rows) < rows_req:
+        return None
+    return JobAllocation(tuple(sorted(rows)), lowest_bits(cols, cols_req))
+
+
+def first_fit(
+    n: int, occ: OccupancyIndex, rows_req: int, cols_req: int
+) -> Optional[JobAllocation]:
+    per_row = _rows_by_free(n, occ)
+    for seed in range(len(per_row)):
+        alloc = _grow_from_seed(per_row, seed, rows_req, cols_req)
+        if alloc is not None:
+            return alloc
+    return None
+
+
+def _fragmentation_score(
+    per_row: Sequence[Tuple[int, int]], alloc: JobAllocation
+) -> int:
+    """Free cells in the allocation's rows and columns that the job leaves
+    stranded — a proxy for how much future rectangular capacity this
+    placement destroys (rows/cols it touches can no longer host a clean
+    rectangle through those lines)."""
+    rows = set(alloc.rows)
+    cmask = mask_of(alloc.cols)
+    stranded = 0
+    for r, free_mask in per_row:
+        if r in rows:
+            stranded += (free_mask & ~cmask).bit_count()
+        else:
+            stranded += (free_mask & cmask).bit_count()
+    return stranded
+
+
+def best_fit(
+    n: int, occ: OccupancyIndex, rows_req: int, cols_req: int
+) -> Optional[JobAllocation]:
+    per_row = _rows_by_free(n, occ)
+    best: Optional[JobAllocation] = None
+    best_score = None
+    for seed in range(len(per_row)):
+        alloc = _grow_from_seed(per_row, seed, rows_req, cols_req)
+        if alloc is None:
+            continue
+        score = _fragmentation_score(per_row, alloc)
+        if best_score is None or score < best_score:
+            best, best_score = alloc, score
+    return best
+
+
+def rail_aware(
+    n: int, occ: OccupancyIndex, rows_req: int, cols_req: int
+) -> Optional[JobAllocation]:
+    """Propose maximal healthy sub-grids with the Figure-20 greedy packer
+    (treating non-free nodes as faults), then trim the first that fits."""
+    occupied = occ.occupied_list()
+    for prop in allocate_multi_jobs(n, occupied, max_jobs=8):
+        if len(prop.rows) >= rows_req and len(prop.cols) >= cols_req:
+            return JobAllocation(prop.rows[:rows_req], prop.cols[:cols_req])
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Reference (seed) set-based implementations — used by the equivalence
+# property tests; NOT registered as policies.
+# ---------------------------------------------------------------------------
+
+
+def _rows_by_free_ref(n: int, free: Set[Coord]) -> List[Tuple[int, FrozenSet[int]]]:
     per_row = []
     for r in range(n):
         cols = frozenset(c for c in range(n) if (r, c) in free)
@@ -38,13 +151,12 @@ def _rows_by_free(n: int, free: Set[Coord]) -> List[Tuple[int, FrozenSet[int]]]:
     return per_row
 
 
-def _grow_from_seed(
+def _grow_from_seed_ref(
     per_row: Sequence[Tuple[int, FrozenSet[int]]],
     seed_idx: int,
     rows_req: int,
     cols_req: int,
 ) -> Optional[JobAllocation]:
-    """Greedy row accretion keeping the common free-column set >= cols_req."""
     seed_row, seed_cols = per_row[seed_idx]
     if len(seed_cols) < cols_req:
         return None
@@ -65,24 +177,20 @@ def _grow_from_seed(
     return JobAllocation(tuple(sorted(rows)), chosen_cols)
 
 
-def first_fit(
+def first_fit_ref(
     n: int, free: Set[Coord], rows_req: int, cols_req: int
 ) -> Optional[JobAllocation]:
-    per_row = _rows_by_free(n, free)
+    per_row = _rows_by_free_ref(n, free)
     for seed in range(len(per_row)):
-        alloc = _grow_from_seed(per_row, seed, rows_req, cols_req)
+        alloc = _grow_from_seed_ref(per_row, seed, rows_req, cols_req)
         if alloc is not None:
             return alloc
     return None
 
 
-def _fragmentation_score(
+def _fragmentation_score_ref(
     n: int, free: Set[Coord], alloc: JobAllocation
 ) -> int:
-    """Free cells in the allocation's rows and columns that the job leaves
-    stranded — a proxy for how much future rectangular capacity this
-    placement destroys (rows/cols it touches can no longer host a clean
-    rectangle through those lines)."""
     rows, cols = set(alloc.rows), set(alloc.cols)
     stranded = 0
     for (r, c) in free:
@@ -92,27 +200,25 @@ def _fragmentation_score(
     return stranded
 
 
-def best_fit(
+def best_fit_ref(
     n: int, free: Set[Coord], rows_req: int, cols_req: int
 ) -> Optional[JobAllocation]:
-    per_row = _rows_by_free(n, free)
+    per_row = _rows_by_free_ref(n, free)
     best: Optional[JobAllocation] = None
     best_score = None
     for seed in range(len(per_row)):
-        alloc = _grow_from_seed(per_row, seed, rows_req, cols_req)
+        alloc = _grow_from_seed_ref(per_row, seed, rows_req, cols_req)
         if alloc is None:
             continue
-        score = _fragmentation_score(n, free, alloc)
+        score = _fragmentation_score_ref(n, free, alloc)
         if best_score is None or score < best_score:
             best, best_score = alloc, score
     return best
 
 
-def rail_aware(
+def rail_aware_ref(
     n: int, free: Set[Coord], rows_req: int, cols_req: int
 ) -> Optional[JobAllocation]:
-    """Propose maximal healthy sub-grids with the Figure-20 greedy packer
-    (treating non-free nodes as faults), then trim the first that fits."""
     occupied = [(r, c) for r in range(n) for c in range(n) if (r, c) not in free]
     for prop in allocate_multi_jobs(n, occupied, max_jobs=8):
         if len(prop.rows) >= rows_req and len(prop.cols) >= cols_req:
@@ -124,6 +230,12 @@ POLICIES: Dict[str, PlacementPolicy] = {
     "first_fit": first_fit,
     "best_fit": best_fit,
     "rail_aware": rail_aware,
+}
+
+REFERENCE_POLICIES: Dict[str, Callable[[int, Set[Coord], int, int], Optional[JobAllocation]]] = {
+    "first_fit": first_fit_ref,
+    "best_fit": best_fit_ref,
+    "rail_aware": rail_aware_ref,
 }
 
 

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
 
 from ..core.availability import JobAllocation
 from ..core.hamiltonian import rails_for_all_to_all
@@ -194,10 +194,26 @@ class ReconfigPlan:
         )
 
 
-def diff_circuits(current: CircuitMap, target: CircuitMap) -> ReconfigPlan:
-    """Per-switch patch plan transforming ``current`` into ``target``."""
+def diff_circuits(
+    current: CircuitMap,
+    target: CircuitMap,
+    keys: Optional[Iterable[SwitchKey]] = None,
+) -> ReconfigPlan:
+    """Per-switch patch plan transforming ``current`` into ``target``.
+
+    ``keys`` restricts the diff to the given switch keys; switches outside
+    ``keys`` are assumed — not checked — to be identical in both maps.
+    Use it when only a known subset can differ (a job's install/uninstall
+    only ever touches the switches its own target names) to avoid paying
+    a sort over the union of two whole global circuit maps.  The
+    scheduler's hot path goes further and builds its touched-key patches
+    inline (``ClusterScheduler._install``/``_uninstall``); this parameter
+    serves external callers diffing restricted views.
+    """
+    if keys is None:
+        keys = set(current) | set(target)
     patches: List[SwitchPatch] = []
-    for key in sorted(set(current) | set(target)):
+    for key in sorted(keys):
         cur = current.get(key, frozenset())
         tgt = target.get(key, frozenset())
         remove, add = cur - tgt, tgt - cur
@@ -230,6 +246,76 @@ def merge_circuits(base: CircuitMap, extra: CircuitMap) -> CircuitMap:
     for k, v in extra.items():
         out[k] = out.get(k, frozenset()) | v
     return out
+
+
+# ---------------------------------------------------------------------------
+# Shape-memoized circuit synthesis (coordinate relabeling)
+# ---------------------------------------------------------------------------
+
+
+def canonical_allocation(alloc: JobAllocation) -> JobAllocation:
+    """The shape-representative allocation: rows 0..R-1, cols 0..C-1."""
+    return JobAllocation(
+        tuple(range(len(alloc.rows))), tuple(range(len(alloc.cols)))
+    )
+
+
+def relabel_circuits(
+    canon: CircuitMap, rows: Sequence[int], cols: Sequence[int]
+) -> CircuitMap:
+    """Map a canonical-allocation circuit map onto actual coordinates.
+
+    ``job_target_circuits`` depends on the allocation only through its
+    (sorted) row/column coordinate values: X switches are keyed by row and
+    their ports encode column coordinates (``+2c`` / ``-2c+1``), Y
+    switches the transpose.  An order-preserving relabel of rows onto
+    ``rows`` and columns onto ``cols`` therefore turns the canonical
+    target into exactly the target the direct synthesis would produce
+    (property-tested in ``tests/test_occupancy.py``).
+    """
+    out: Dict[SwitchKey, FrozenSet[Circuit]] = {}
+    for (dim, group, rail), pairs in canon.items():
+        if dim == "X":
+            grp, coord = rows[group], cols
+        else:
+            grp, coord = cols[group], rows
+        out[(dim, grp, rail)] = frozenset(
+            (2 * coord[pa >> 1], 2 * coord[pb >> 1] + 1) for pa, pb in pairs
+        )
+    return out
+
+
+class CircuitShapeCache:
+    """Memoizes ``job_target_circuits`` (and its validation) by
+    (mapping, allocation shape).
+
+    Identical job shapes placed at different rectangles used to redo the
+    Hamiltonian rail-ring synthesis and the full ring/all-to-all
+    validation from scratch on every placement; both are isomorphic under
+    coordinate relabeling, so one canonical synthesis per shape suffices
+    and a hit costs only the O(|circuits|) relabel.
+    """
+
+    def __init__(self, cfg: RailXConfig, validate: bool = False):
+        self.cfg = cfg
+        self.validate = validate
+        self._cache: Dict[Tuple[object, int, int], CircuitMap] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def target_for(self, mapping: MappingResult, alloc: JobAllocation) -> CircuitMap:
+        key = (mapping, len(alloc.rows), len(alloc.cols))
+        canon = self._cache.get(key)
+        if canon is None:
+            self.misses += 1
+            calloc = canonical_allocation(alloc)
+            canon = job_target_circuits(self.cfg, mapping, calloc)
+            if self.validate:
+                validate_job_reconfig(self.cfg, mapping, calloc, canon)
+            self._cache[key] = canon
+        else:
+            self.hits += 1
+        return relabel_circuits(canon, alloc.rows, alloc.cols)
 
 
 # ---------------------------------------------------------------------------

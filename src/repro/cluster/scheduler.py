@@ -3,10 +3,19 @@
 Discrete-event loop over job-submit / job-finish / node-fail /
 node-recover events.  The scheduler owns:
 
-* the node grid (side = R/2 by default) with its fault set;
+* the node grid (side = R/2 by default) with its fault set, mirrored in
+  an incrementally-maintained ``OccupancyIndex`` (per-row bitmasks,
+  O(footprint) updates) that the placement policies operate on;
 * the global OCS circuit state, updated through ``reconfig`` patch plans
-  whose downtime is charged to the affected jobs' timelines;
-* a FIFO backlog served by a pluggable placement policy.
+  whose downtime is charged to the affected jobs' timelines.  Installs
+  and uninstalls diff only the switch keys a job's target touches and
+  maintain per-switch circuit refcounts, so neither pays for the size of
+  the whole fabric;
+* a FIFO backlog served by a pluggable placement policy, with a
+  free-capacity watermark per backlogged job: a job is only re-attempted
+  once the free set has changed since its last failed attempt (the
+  policies are deterministic, so an unchanged free set is a guaranteed
+  re-failure).
 
 Failure handling (§6.6): when a node inside a running job's rectangle
 fails, the scheduler tries, in order,
@@ -20,7 +29,10 @@ fails, the scheduler tries, in order,
 
 Goodput: each placed job's Table-4 traffic is routed through
 ``core.simulator``'s flow model on the job's reconfigured rail network;
-service time stretches by 1/goodput.
+service time stretches by 1/goodput.  Circuit targets and goodput are
+memoized by (mapping, allocation shape) — see ``reconfig.CircuitShapeCache``
+and ``metrics.GoodputCache`` — so repeat placements of the same job shape
+cost one coordinate relabel instead of a fresh ring synthesis + routing.
 """
 
 from __future__ import annotations
@@ -41,17 +53,17 @@ from .events import (
     NodeRecover,
 )
 from .jobs import JobMapping, JobSpec, plan_job_mapping
-from .metrics import JobRecord, TimelineMetrics, estimate_goodput
+from .metrics import GoodputCache, JobRecord, TimelineMetrics
+from .occupancy import OccupancyIndex
 from .placement import PlacementPolicy, get_policy
 from .reconfig import (
+    Circuit,
     CircuitMap,
+    CircuitShapeCache,
     ReconfigCostModel,
     ReconfigPlan,
-    apply_plan,
-    diff_circuits,
-    job_target_circuits,
-    merge_circuits,
-    validate_job_reconfig,
+    SwitchKey,
+    SwitchPatch,
 )
 
 
@@ -65,6 +77,7 @@ class RunningJob:
     remaining_work_s: float       # seconds at goodput 1.0
     resumed_t: float              # when the current run segment started
     expected_finish: float
+    epoch: int = 0                # run-segment counter (JobFinish matching)
 
 
 class ClusterScheduler:
@@ -98,21 +111,25 @@ class ClusterScheduler:
         self.metrics = TimelineMetrics(grid_nodes=self.n * self.n)
         self._queue = EventQueue()
         self._jmap_cache: Dict[int, JobMapping] = {}
+        self._occ = OccupancyIndex(self.n)
+        self._circuit_cache = CircuitShapeCache(cfg, validate=validate_circuits)
+        self._goodput_cache = GoodputCache(cfg)
+        # per-switch circuit refcounts: uninstall removes a circuit only
+        # when its last owner releases it (jobs on disjoint rectangles use
+        # disjoint ports, so counts stay at 1 in practice — the refcount
+        # keeps the diff local either way)
+        self._switch_refs: Dict[SwitchKey, Dict[Circuit, int]] = {}
+        # backlog watermark: job_id -> occupancy version at last failed
+        # placement attempt; unchanged version => guaranteed re-failure
+        self._backlog_seen: Dict[int, int] = {}
+        self._segment: Dict[int, int] = {}     # job_id -> run-segment epoch
 
     # -- state helpers ------------------------------------------------------
 
     def free_nodes(self) -> Set[Coord]:
-        used: Set[Coord] = set(self.faults)
-        for rj in self.running.values():
-            for r in rj.alloc.rows:
-                for c in rj.alloc.cols:
-                    used.add((r, c))
-        return {
-            (r, c)
-            for r in range(self.n)
-            for c in range(self.n)
-            if (r, c) not in used
-        }
+        """Materialized free set (kept for inspection/tests; the hot path
+        uses ``self._occ`` directly)."""
+        return self._occ.free_set()
 
     def occupied_nodes(self) -> int:
         return sum(rj.alloc.size for rj in self.running.values())
@@ -128,37 +145,65 @@ class ClusterScheduler:
             self._jmap_cache[job.job_id] = plan_job_mapping(self.cfg, job)
         return self._jmap_cache[job.job_id]
 
+    def _sync_cache_stats(self) -> None:
+        self.metrics.circuit_cache_hits = self._circuit_cache.hits
+        self.metrics.circuit_cache_misses = self._circuit_cache.misses
+        self.metrics.goodput_cache_hits = self._goodput_cache.hits
+        self.metrics.goodput_cache_misses = self._goodput_cache.misses
+
     # -- reconfiguration ----------------------------------------------------
+
+    def _account(self, plan: ReconfigPlan) -> float:
+        dt = self.cost_model.downtime(plan)
+        if plan.patches:
+            self.metrics.reconfig_rounds += 1
+            self.metrics.circuits_flipped += plan.circuits_flipped
+            self.metrics.total_downtime_s += dt
+        return dt
 
     def _install(self, target: CircuitMap) -> Tuple[ReconfigPlan, float]:
         """Patch the global circuit state to include ``target``; returns the
-        plan and its downtime."""
-        merged = merge_circuits(self.circuits, target)
-        plan = diff_circuits(self.circuits, merged)
-        self.circuits = apply_plan(self.circuits, plan)
-        dt = self.cost_model.downtime(plan)
-        if plan.patches:
-            self.metrics.reconfig_rounds += 1
-            self.metrics.circuits_flipped += plan.circuits_flipped
-            self.metrics.total_downtime_s += dt
-        return plan, dt
+        plan and its downtime.  Touches only the switch keys in ``target``."""
+        patches: List[SwitchPatch] = []
+        for key in sorted(target):
+            tgt = target[key]
+            refs = self._switch_refs.setdefault(key, {})
+            for c in tgt:
+                refs[c] = refs.get(c, 0) + 1
+            cur = self.circuits.get(key, frozenset())
+            add = tgt - cur
+            if add:
+                patches.append(SwitchPatch(key, remove=frozenset(), add=add))
+                self.circuits[key] = cur | add
+        plan = ReconfigPlan(tuple(patches))
+        return plan, self._account(plan)
 
     def _uninstall(self, target: CircuitMap) -> Tuple[ReconfigPlan, float]:
-        remaining: Dict = dict(self.circuits)
-        for k, v in target.items():
-            left = remaining.get(k, frozenset()) - v
-            if left:
-                remaining[k] = left
-            else:
-                remaining.pop(k, None)
-        plan = diff_circuits(self.circuits, remaining)
-        self.circuits = apply_plan(self.circuits, plan)
-        dt = self.cost_model.downtime(plan)
-        if plan.patches:
-            self.metrics.reconfig_rounds += 1
-            self.metrics.circuits_flipped += plan.circuits_flipped
-            self.metrics.total_downtime_s += dt
-        return plan, dt
+        patches: List[SwitchPatch] = []
+        for key in sorted(target):
+            tgt = target[key]
+            refs = self._switch_refs.setdefault(key, {})
+            dead = set()
+            for c in tgt:
+                left = refs.get(c, 0) - 1
+                if left > 0:
+                    refs[c] = left
+                else:
+                    refs.pop(c, None)
+                    dead.add(c)
+            if not refs:
+                del self._switch_refs[key]
+            cur = self.circuits.get(key, frozenset())
+            remove = cur & frozenset(dead)
+            if remove:
+                patches.append(SwitchPatch(key, remove=remove, add=frozenset()))
+                left_circuits = cur - remove
+                if left_circuits:
+                    self.circuits[key] = left_circuits
+                else:
+                    self.circuits.pop(key, None)
+        plan = ReconfigPlan(tuple(patches))
+        return plan, self._account(plan)
 
     # -- placement ----------------------------------------------------------
 
@@ -167,25 +212,32 @@ class ClusterScheduler:
         remaining_work_s: Optional[float] = None,
     ) -> bool:
         jmap = jmap or self._job_mapping(job)
+        self.metrics.placement_attempts += 1
         if jmap.nodes > self.n * self.n:
             return False
-        alloc = self.policy(self.n, self.free_nodes(), jmap.rows_req, jmap.cols_req)
+        if not self._occ.can_fit(jmap.rows_req, jmap.cols_req):
+            # O(n) necessary condition (enough rows with enough free cells)
+            # — skip the policy scan when no rectangle can possibly exist
+            return False
+        self.metrics.placement_scans += 1
+        alloc = self.policy(self.n, self._occ, jmap.rows_req, jmap.cols_req)
         if alloc is None:
             return False
-        target = job_target_circuits(self.cfg, jmap.mapping, alloc)
-        if self.validate_circuits:
-            validate_job_reconfig(self.cfg, jmap.mapping, alloc, target)
+        target = self._circuit_cache.target_for(jmap.mapping, alloc)
         _, downtime = self._install(target)
         if self.goodput_model == "flow":
-            g = estimate_goodput(self.cfg, job, jmap.mapping, alloc)
+            g = self._goodput_cache.goodput_for(job, jmap.mapping, alloc)
         else:
             g = 1.0
         work = job.service_s if remaining_work_s is None else remaining_work_s
         finish = t + downtime + work / g
+        epoch = self._segment.get(job.job_id, 0) + 1
+        self._segment[job.job_id] = epoch
+        self._occ.occupy(alloc.rows, alloc.cols)
         self.running[job.job_id] = RunningJob(
             job=job, jmap=jmap, alloc=alloc, circuits=target,
             goodput=g, remaining_work_s=work, resumed_t=t + downtime,
-            expected_finish=finish,
+            expected_finish=finish, epoch=epoch,
         )
         rec = self.metrics.records[job.job_id]
         if rec.start_t is None:
@@ -193,7 +245,7 @@ class ClusterScheduler:
         rec.nodes = alloc.size
         rec.goodput = g
         rec.reconfig_downtime_s += downtime
-        self._queue.push(JobFinish(time=finish, job_id=job.job_id))
+        self._queue.push(JobFinish(time=finish, job_id=job.job_id, epoch=epoch))
         return True
 
     def _drain_backlog(self, t: float) -> None:
@@ -201,9 +253,15 @@ class ClusterScheduler:
         while placed_any:
             placed_any = False
             for job in list(self.backlog):
+                seen = self._backlog_seen.get(job.job_id)
+                if seen is not None and seen == self._occ.version:
+                    continue  # free set identical to the last failure
                 if self._try_place(job, t):
                     self.backlog.remove(job)
+                    self._backlog_seen.pop(job.job_id, None)
                     placed_any = True
+                else:
+                    self._backlog_seen[job.job_id] = self._occ.version
 
     # -- failure handling ---------------------------------------------------
 
@@ -221,11 +279,13 @@ class ClusterScheduler:
         elapsed = max(0.0, t - rj.resumed_t)
         remaining = max(0.0, rj.remaining_work_s - elapsed * rj.goodput)
         self._uninstall(rj.circuits)
+        self._occ.release(rj.alloc.rows, rj.alloc.cols)
         del self.running[rj.job.job_id]
         return remaining
 
     def _handle_node_fail(self, ev: NodeFail) -> None:
         self.faults.add(ev.node)
+        self._occ.fault(ev.node)
         victim: Optional[RunningJob] = None
         for rj in self.running.values():
             if ev.node[0] in rj.alloc.rows and ev.node[1] in rj.alloc.cols:
@@ -266,9 +326,12 @@ class ClusterScheduler:
                 return
             plan = plan2
         # 3) requeue with remaining work; the eviction freed the rest of the
-        # rectangle, so offer it to the backlog immediately
+        # rectangle, so offer it to the backlog immediately.  The full-size
+        # migrate attempt above already failed at the current occupancy
+        # version, so seed the watermark accordingly.
         requeued = dataclasses.replace(job, service_s=remaining)
         self.backlog.insert(0, requeued)
+        self._backlog_seen[job.job_id] = self._occ.version
         self._drain_backlog(ev.time)
 
     # -- event loop ---------------------------------------------------------
@@ -281,11 +344,13 @@ class ClusterScheduler:
             )
             if not self._try_place(job, ev.time):
                 self.backlog.append(job)
+                self._backlog_seen[job.job_id] = self._occ.version
         elif isinstance(ev, JobFinish):
             rj = self.running.get(ev.job_id)
-            if rj is None or abs(rj.expected_finish - ev.time) > 1e-9:
-                return  # stale finish from before a migrate/shrink
+            if rj is None or ev.epoch != rj.epoch:
+                return  # stale finish from a superseded run segment
             self._uninstall(rj.circuits)
+            self._occ.release(rj.alloc.rows, rj.alloc.cols)
             del self.running[ev.job_id]
             self.metrics.records[ev.job_id].finish_t = ev.time
             self._drain_backlog(ev.time)
@@ -293,6 +358,7 @@ class ClusterScheduler:
             self._handle_node_fail(ev)
         elif isinstance(ev, NodeRecover):
             self.faults.discard(ev.node)
+            self._occ.recover(ev.node)
             self._drain_backlog(ev.time)
         else:  # pragma: no cover
             raise TypeError(f"unknown event {ev!r}")
@@ -316,6 +382,7 @@ class ClusterScheduler:
             self._dispatch(ev)
             self._sync_occupancy()
             self.metrics.events_processed += 1
+        self._sync_cache_stats()
         return self.metrics
 
     # -- rendering ----------------------------------------------------------

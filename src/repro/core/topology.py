@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from functools import lru_cache
 from typing import Dict, List, Literal, Optional, Sequence, Tuple
 
 from .hamiltonian import hamiltonian_decomposition, rails_for_all_to_all
@@ -198,11 +199,20 @@ def _add_edge(g: AdjGraph, a: Node, b: Node, mult: int = 1) -> None:
     g[b][a] = g[b].get(a, 0) + mult
 
 
+@lru_cache(maxsize=None)
+def _rail_rings_cached(scale: int) -> Tuple[Tuple[int, ...], ...]:
+    cycles = hamiltonian_decomposition(scale) if scale > 2 else [(0, 1)]
+    return tuple(tuple(c) for c in cycles)
+
+
 def all_to_all_rail_rings(scale: int) -> List[List[int]]:
     """The rail rings (node orders) wiring ``scale`` nodes all-to-all
-    (Lemma 3.1).  Each returned ring is one rail's circuit configuration."""
-    cycles = hamiltonian_decomposition(scale) if scale > 2 else [(0, 1)]
-    return [list(c) for c in cycles]
+    (Lemma 3.1).  Each returned ring is one rail's circuit configuration.
+
+    The decomposition is memoized per scale (it is deterministic and the
+    cluster scheduler requests the same handful of scales on every
+    placement); callers get fresh lists so they may mutate freely."""
+    return [list(c) for c in _rail_rings_cached(scale)]
 
 
 def build_torus_2d(side: int) -> AdjGraph:
