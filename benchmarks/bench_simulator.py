@@ -1,0 +1,252 @@
+"""Flow-level simulator benchmark — emits ``BENCH_simulator.json``.
+
+Tracks the perf trajectory of the vectorized flow engine
+(``repro.core.compiled_flow``) against the seed pure-Python dict engine:
+
+* **exact mode** — all-to-all sweeps on the dict-built Fig. 14 networks
+  at 256 / 1,024 / 4,096 chips.  The compiled engine reproduces the seed
+  engine's throughput **bit for bit** (asserted against the recorded
+  baselines below), so the speedup column compares identical
+  computations.
+* **symmetry mode** — the canonical translation-symmetric builders at
+  16K and 102K chips (the paper's ">100K chips" Fig. 14 operating
+  point): one representative source per automorphism class, loads
+  reconstructed exactly over the group orbit.
+
+  PYTHONPATH=src python benchmarks/bench_simulator.py             # full
+  PYTHONPATH=src python benchmarks/bench_simulator.py --smoke     # CI
+  PYTHONPATH=src python benchmarks/bench_simulator.py --with-seed # slow
+
+``--smoke`` checks engine parity (compiled == seed reference at 256
+chips, symmetry == exact brute force at 400 chips) plus a loose wall
+ceiling, and does NOT rewrite BENCH_simulator.json.  ``--with-seed``
+re-measures the seed engine (minutes at 4,096 chips) instead of using
+the recorded baselines.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_simulator.json")
+
+INJ = 8.0
+
+# seed (dict-engine) all-to-all sweep baselines, measured in this
+# container (2 cores); re-measure with --with-seed
+SEED_BASELINES = {
+    ("railx", 8): {"wall_s": 0.185, "thr": "1.0967741935483908"},
+    ("railx", 16): {"wall_s": 4.77, "thr": "1.0476190476190483"},
+    ("railx", 32): {"wall_s": 127.12, "thr": "1.023622047244098"},
+    ("torus", 32): {"wall_s": 242.09, "thr": "0.013885498046807778"},
+}
+
+EXACT_GRID = (("railx", 8), ("railx", 16), ("railx", 32), ("torus", 32))
+SYMMETRY_GRID = (("railx", 64), ("railx", 160), ("torus", 160))
+
+
+def _chips(scale, m):
+    return [
+        (X, Y, x, y)
+        for X in range(scale)
+        for Y in range(scale)
+        for x in range(m)
+        for y in range(m)
+    ]
+
+
+def _dict_net(topo, scale, m=2, k=2.0):
+    from repro.core.simulator import (
+        build_railx_hyperx_network,
+        build_torus2d_network,
+    )
+
+    build = build_railx_hyperx_network if topo == "railx" else build_torus2d_network
+    return build(scale, m, k), _chips(scale, m)
+
+
+def _canonical_net(topo, scale, m=2, k=2.0):
+    from repro.core.compiled_flow import (
+        build_compiled_railx_hyperx,
+        build_compiled_torus2d,
+    )
+
+    build = build_compiled_railx_hyperx if topo == "railx" else build_compiled_torus2d
+    return build(scale, m, k)
+
+
+def _seed_sweep(net, chips):
+    from repro.core.simulator import (
+        max_utilization,
+        route_demands_ecmp_reference,
+    )
+
+    per_pair = INJ / (len(chips) - 1)
+    demands = {(s, t): per_pair for s in chips for t in chips if s != t}
+    util = max_utilization(net, route_demands_ecmp_reference(net, demands))
+    return INJ * min(1.0, 1.0 / util) if util > 0 else INJ
+
+
+def _warmup() -> None:
+    """Pull in numpy/scipy and their lazy kernels so the first timed row
+    measures the sweep, not module imports."""
+    from repro.core.simulator import alltoall_throughput
+
+    net, chips = _dict_net("railx", 2)
+    alltoall_throughput(net, chips, INJ)
+
+
+def bench_exact(with_seed: bool) -> tuple:
+    """Returns (rows, baselines): ``baselines`` are the seed numbers the
+    rows were compared against — freshly measured under ``--with-seed``,
+    the recorded constants otherwise — so the emitted JSON is always
+    self-consistent."""
+    from repro.core.simulator import alltoall_throughput
+
+    _warmup()
+    rows = []
+    baselines = {}
+    for topo, scale in EXACT_GRID:
+        net, chips = _dict_net(topo, scale)
+        t0 = time.perf_counter()
+        thr = alltoall_throughput(net, chips, INJ)
+        wall = time.perf_counter() - t0
+        if with_seed:
+            t0 = time.perf_counter()
+            seed_thr = _seed_sweep(net, chips)
+            seed = {"wall_s": round(time.perf_counter() - t0, 3),
+                    "thr": repr(seed_thr)}
+        else:
+            seed = SEED_BASELINES.get((topo, scale))
+        if seed is not None:
+            baselines[(topo, scale)] = seed
+        row = {
+            "mode": "exact", "topo": topo, "scale": scale, "m": 2,
+            "chips": len(chips),
+            "wall_s": round(wall, 4),
+            "a2a_flits_per_cycle_chip": thr,
+        }
+        if seed is not None:
+            assert repr(thr) == seed["thr"], (
+                f"exact engine diverged from seed on {topo}/{scale}: "
+                f"{thr!r} != {seed['thr']}"
+            )
+            row["seed_wall_s"] = seed["wall_s"]
+            row["speedup_vs_seed"] = round(seed["wall_s"] / wall, 1)
+        rows.append(row)
+        print(
+            f"bench_simulator_exact_{topo}_{len(chips)},{wall * 1e6:.1f},"
+            f"a2a={thr:.4f};speedup={row.get('speedup_vs_seed', 'n/a')}x"
+        )
+    return rows, baselines
+
+
+def bench_symmetry() -> list:
+    from repro.core.compiled_flow import symmetric_alltoall_throughput
+
+    rows = []
+    for topo, scale in SYMMETRY_GRID:
+        t0 = time.perf_counter()
+        cn = _canonical_net(topo, scale)
+        build_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        thr = symmetric_alltoall_throughput(cn, INJ)
+        wall = time.perf_counter() - t0
+        rows.append({
+            "mode": "symmetry", "topo": topo, "scale": scale, "m": 2,
+            "chips": cn.num_vertices,
+            "build_s": round(build_s, 4),
+            "wall_s": round(wall, 4),
+            "a2a_flits_per_cycle_chip": thr,
+        })
+        print(
+            f"bench_simulator_symmetry_{topo}_{cn.num_vertices},"
+            f"{wall * 1e6:.1f},a2a={thr:.4f};build_s={build_s:.2f}"
+        )
+    return rows
+
+
+def smoke() -> None:
+    import numpy as np
+
+    from repro.core.compiled_flow import (
+        alltoall_edge_counts,
+        build_compiled_railx_hyperx,
+        build_compiled_torus2d,
+        symmetric_alltoall_counts,
+        symmetric_alltoall_throughput,
+        utilization_from_counts,
+    )
+    from repro.core.simulator import alltoall_throughput
+
+    t0 = time.perf_counter()
+    # compiled exact == seed reference, bit for bit, at 256 chips
+    net, chips = _dict_net("railx", 8)
+    thr = alltoall_throughput(net, chips, INJ)
+    assert repr(thr) == SEED_BASELINES[("railx", 8)]["thr"], thr
+    # symmetry sweep == exact brute force on canonical networks
+    for cn in (
+        build_compiled_railx_hyperx(5, 2, 2.0),
+        build_compiled_torus2d(5, 2, 2.0),
+    ):
+        re, K = symmetric_alltoall_counts(cn)
+        K_full = alltoall_edge_counts(cn)
+        assert np.array_equal(K_full[re], K)
+        per_pair = INJ / (cn.num_vertices - 1)
+        assert utilization_from_counts(
+            K, cn.cap[re], per_pair, sequential=False
+        ) == utilization_from_counts(
+            K_full, cn.cap, per_pair, sequential=False
+        )
+        assert 0 < symmetric_alltoall_throughput(cn, INJ) <= INJ
+    wall = time.perf_counter() - t0
+    # seed needed 0.185 s for the 256-chip sweep alone; the whole smoke
+    # (that sweep + two brute-force 400-chip sweeps) must stay snappy or
+    # the vectorized engine has regressed
+    assert wall < 20.0, f"simulator smoke took {wall:.1f}s"
+    print(f"smoke ok ({wall:.2f}s)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="engine parity + perf guard for CI; no BENCH_simulator.json write",
+    )
+    ap.add_argument(
+        "--with-seed", action="store_true",
+        help="re-measure the seed dict engine instead of recorded baselines",
+    )
+    args = ap.parse_args()
+
+    if args.smoke:
+        smoke()
+        return
+
+    exact_rows, baselines = bench_exact(args.with_seed)
+    rows = exact_rows + bench_symmetry()
+    with open(OUT, "w") as f:
+        json.dump(
+            {
+                "bench": "simulator",
+                "injection_ports": INJ,
+                "seed_baselines_measured": args.with_seed,
+                "seed_baselines": {
+                    f"{t}_{s}": v for (t, s), v in baselines.items()
+                },
+                "rows": rows,
+            },
+            f, indent=2,
+        )
+        f.write("\n")
+    print(f"wrote {os.path.relpath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -80,7 +80,14 @@ from .reconfig import (
     validate_job_reconfig,
 )
 from .scheduler import ClusterScheduler
-from .trace import fig20_trace, failure_trace, poisson_trace, replay_trace
+from .trace import (
+    fig20_trace,
+    failure_trace,
+    iter_failure_trace,
+    iter_poisson_trace,
+    poisson_trace,
+    replay_trace,
+)
 
 __all__ = [
     "CircuitShapeCache",
@@ -111,6 +118,8 @@ __all__ = [
     "fig20_trace",
     "first_fit",
     "get_policy",
+    "iter_failure_trace",
+    "iter_poisson_trace",
     "job_target_circuits",
     "make_job",
     "model_spec_from_config",

@@ -18,8 +18,13 @@ import math
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 from ..core.availability import JobAllocation
+from ..core.compiled_flow import (
+    CompiledNetwork,
+    max_utilization_compiled,
+    route_demands,
+)
 from ..core.mapping import MappingResult
-from ..core.simulator import FlowNetwork, max_utilization, route_demands_ecmp
+from ..core.simulator import FlowNetwork
 from ..core.topology import DimensionSpec, RailXConfig, all_to_all_rail_rings
 from .jobs import JobSpec, job_comm_volumes
 from .reconfig import _rail_ranges, _subgroups
@@ -154,8 +159,15 @@ def estimate_goodput(
                             add_demand(b, a, v * factor / 2)
     if not demands or ideal_t <= 0:
         return 1.0
-    load = route_demands_ecmp(net, demands)
-    util = max_utilization(net, load)      # bytes over unit-capacity links
+    # compiled path: lower once, route with the vectorized engine (loads
+    # and the bottleneck utilization are bit-identical to the seed dict
+    # engine — see tests/test_simulator_parity.py)
+    cn = CompiledNetwork.from_flow_network(net)
+    vid = cn.vertex_id
+    load = route_demands(
+        cn, {(vid[a], vid[b]): v for (a, b), v in demands.items()}
+    )
+    util = max_utilization_compiled(cn, load)  # bytes over unit-cap links
     if not math.isfinite(util) or util <= 0:
         return 1.0
     actual_t = util / port_bw              # bottleneck serialization seconds
@@ -287,5 +299,7 @@ class TimelineMetrics:
             "placement_attempts": self.placement_attempts,
             "placement_scans": self.placement_scans,
             "circuit_cache_hits": self.circuit_cache_hits,
+            "circuit_cache_misses": self.circuit_cache_misses,
             "goodput_cache_hits": self.goodput_cache_hits,
+            "goodput_cache_misses": self.goodput_cache_misses,
         }

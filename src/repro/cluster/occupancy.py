@@ -23,34 +23,13 @@ Invariants (checked by the property tests in ``tests/test_occupancy.py``):
 
 from __future__ import annotations
 
-from typing import Iterable, List, Sequence, Set, Tuple
+from typing import List, Sequence, Set, Tuple
+
+# canonical bit-twiddling helpers live next to the mask-based Figure-20
+# packer in core.availability; re-exported here for the placement policies
+from ..core.availability import iter_bits, lowest_bits, mask_of  # noqa: F401
 
 Coord = Tuple[int, int]
-
-
-def iter_bits(mask: int) -> Iterable[int]:
-    """Yield the set bit positions of ``mask`` in ascending order."""
-    while mask:
-        low = mask & -mask
-        yield low.bit_length() - 1
-        mask ^= low
-
-
-def lowest_bits(mask: int, k: int) -> Tuple[int, ...]:
-    """The ``k`` lowest set bit positions of ``mask`` (== sorted(bits)[:k])."""
-    out: List[int] = []
-    while mask and len(out) < k:
-        low = mask & -mask
-        out.append(low.bit_length() - 1)
-        mask ^= low
-    return tuple(out)
-
-
-def mask_of(cols: Sequence[int]) -> int:
-    m = 0
-    for c in cols:
-        m |= 1 << c
-    return m
 
 
 class OccupancyIndex:
@@ -85,8 +64,9 @@ class OccupancyIndex:
         return out
 
     def occupied_list(self) -> List[Coord]:
-        """Non-free cells in row-major order (what ``rail_aware`` feeds to
-        ``allocate_multi_jobs`` as synthetic faults)."""
+        """Non-free cells in row-major order (inspection/test helper; the
+        ``rail_aware`` policy feeds ``free_row`` masks straight to the
+        bitmask packer and never materializes this list)."""
         out: List[Coord] = []
         for r in range(self.n):
             unfree = self.full & ~self.free_row(r)

@@ -12,9 +12,10 @@ Policies:
 * ``best_fit``     — among candidate rectangles, minimize the
                      fragmentation score (free cells stranded in the
                      chosen rows/columns that the job does not use);
-* ``rail_aware``   — reuse ``availability.allocate_multi_jobs``'s greedy
-                     rail packing to propose maximal sub-grids, then trim
-                     the first proposal that covers the request.
+* ``rail_aware``   — reuse the Figure-20 greedy rail packing
+                     (``availability.allocate_multi_jobs_masks``) to
+                     propose maximal sub-grids, then trim the first
+                     proposal that covers the request.
 
 All three operate on the scheduler's ``OccupancyIndex`` — per-row integer
 bitmasks where intersection is ``&`` and cardinality is ``int.bit_count``
@@ -29,7 +30,11 @@ from __future__ import annotations
 
 from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
 
-from ..core.availability import JobAllocation, allocate_multi_jobs
+from ..core.availability import (
+    JobAllocation,
+    allocate_multi_jobs_masks,
+    allocate_multi_jobs_ref,
+)
 from .occupancy import OccupancyIndex, lowest_bits, mask_of
 
 Coord = Tuple[int, int]
@@ -127,9 +132,13 @@ def rail_aware(
     n: int, occ: OccupancyIndex, rows_req: int, cols_req: int
 ) -> Optional[JobAllocation]:
     """Propose maximal healthy sub-grids with the Figure-20 greedy packer
-    (treating non-free nodes as faults), then trim the first that fits."""
-    occupied = occ.occupied_list()
-    for prop in allocate_multi_jobs(n, occupied, max_jobs=8):
+    (treating non-free nodes as faults), then trim the first that fits.
+
+    Feeds the index's free-row bitmasks straight into the packer's
+    bitmask core — no O(n²) occupied-coordinate materialization and no
+    frozenset algebra anywhere on the proposal path."""
+    masks = [occ.free_row(r) for r in range(n)]
+    for prop in allocate_multi_jobs_masks(n, masks, max_jobs=8):
         if len(prop.rows) >= rows_req and len(prop.cols) >= cols_req:
             return JobAllocation(prop.rows[:rows_req], prop.cols[:cols_req])
     return None
@@ -220,7 +229,7 @@ def rail_aware_ref(
     n: int, free: Set[Coord], rows_req: int, cols_req: int
 ) -> Optional[JobAllocation]:
     occupied = [(r, c) for r in range(n) for c in range(n) if (r, c) not in free]
-    for prop in allocate_multi_jobs(n, occupied, max_jobs=8):
+    for prop in allocate_multi_jobs_ref(n, occupied, max_jobs=8):
         if len(prop.rows) >= rows_req and len(prop.cols) >= cols_req:
             return JobAllocation(prop.rows[:rows_req], prop.cols[:cols_req])
     return None

@@ -123,6 +123,12 @@ class ClusterScheduler:
         # placement attempt; unchanged version => guaranteed re-failure
         self._backlog_seen: Dict[int, int] = {}
         self._segment: Dict[int, int] = {}     # job_id -> run-segment epoch
+        # occupied-node counter maintained at place/evict/finish, with a
+        # dirty flag so the per-event metrics sync is O(1) instead of an
+        # O(#running-jobs) walk (the walk is kept as
+        # ``recount_occupied_nodes`` for the equivalence tests)
+        self._occupied_count = 0
+        self._occ_dirty = True
 
     # -- state helpers ------------------------------------------------------
 
@@ -132,13 +138,19 @@ class ClusterScheduler:
         return self._occ.free_set()
 
     def occupied_nodes(self) -> int:
+        return self._occupied_count
+
+    def recount_occupied_nodes(self) -> int:
+        """O(#running-jobs) recomputation (tests / debugging only)."""
         return sum(rj.alloc.size for rj in self.running.values())
 
     def healthy_nodes(self) -> int:
         return self.n * self.n - len(self.faults)
 
     def _sync_occupancy(self) -> None:
-        self.metrics.set_occupancy(self.occupied_nodes(), self.healthy_nodes())
+        if self._occ_dirty:
+            self.metrics.set_occupancy(self._occupied_count, self.healthy_nodes())
+            self._occ_dirty = False
 
     def _job_mapping(self, job: JobSpec) -> JobMapping:
         if job.job_id not in self._jmap_cache:
@@ -234,6 +246,8 @@ class ClusterScheduler:
         epoch = self._segment.get(job.job_id, 0) + 1
         self._segment[job.job_id] = epoch
         self._occ.occupy(alloc.rows, alloc.cols)
+        self._occupied_count += alloc.size
+        self._occ_dirty = True
         self.running[job.job_id] = RunningJob(
             job=job, jmap=jmap, alloc=alloc, circuits=target,
             goodput=g, remaining_work_s=work, resumed_t=t + downtime,
@@ -280,12 +294,15 @@ class ClusterScheduler:
         remaining = max(0.0, rj.remaining_work_s - elapsed * rj.goodput)
         self._uninstall(rj.circuits)
         self._occ.release(rj.alloc.rows, rj.alloc.cols)
+        self._occupied_count -= rj.alloc.size
+        self._occ_dirty = True
         del self.running[rj.job.job_id]
         return remaining
 
     def _handle_node_fail(self, ev: NodeFail) -> None:
         self.faults.add(ev.node)
         self._occ.fault(ev.node)
+        self._occ_dirty = True                 # healthy count changed
         victim: Optional[RunningJob] = None
         for rj in self.running.values():
             if ev.node[0] in rj.alloc.rows and ev.node[1] in rj.alloc.cols:
@@ -351,6 +368,8 @@ class ClusterScheduler:
                 return  # stale finish from a superseded run segment
             self._uninstall(rj.circuits)
             self._occ.release(rj.alloc.rows, rj.alloc.cols)
+            self._occupied_count -= rj.alloc.size
+            self._occ_dirty = True
             del self.running[ev.job_id]
             self.metrics.records[ev.job_id].finish_t = ev.time
             self._drain_backlog(ev.time)
@@ -359,9 +378,17 @@ class ClusterScheduler:
         elif isinstance(ev, NodeRecover):
             self.faults.discard(ev.node)
             self._occ.recover(ev.node)
+            self._occ_dirty = True             # healthy count changed
             self._drain_backlog(ev.time)
         else:  # pragma: no cover
             raise TypeError(f"unknown event {ev!r}")
+
+    def enqueue(self, events: Iterable[Event]) -> None:
+        """Stream events into the queue without running the loop (lets a
+        benchmark separate trace generation from event-loop timing while
+        still never materializing the trace as a list)."""
+        for ev in events:
+            self._queue.push(ev)
 
     def run(
         self, events: Iterable[Event] = (), until: Optional[float] = None
@@ -369,8 +396,7 @@ class ClusterScheduler:
         """Process events in time order; ``until`` stops the loop once the
         next event lies beyond it (pending events stay queued, so ``run``
         can be called again to continue)."""
-        for ev in events:
-            self._queue.push(ev)
+        self.enqueue(events)
         self._sync_occupancy()
         while self._queue:
             next_t = self._queue.peek_time()

@@ -9,12 +9,16 @@ back-to-back onto a faulted grid.
 
 All randomness flows through one ``random.Random(seed)`` so a trace is a
 pure function of its arguments (the scheduler itself is deterministic).
+The ``iter_*`` variants are lazy generators producing the identical
+event sequence — the scheduler consumes any iterable, so benchmarks can
+stream a day-long trace straight into the event queue without ever
+materializing the intermediate list.
 """
 
 from __future__ import annotations
 
 import random
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 from ..core.mapping import ParallelismPlan
 from .events import Event, JobSubmit, NodeFail, NodeRecover
@@ -29,7 +33,7 @@ DEFAULT_MIX: Tuple[str, ...] = (
 )
 
 
-def poisson_trace(
+def iter_poisson_trace(
     *,
     seed: int = 0,
     duration_s: float = 4 * 3600.0,
@@ -37,11 +41,10 @@ def poisson_trace(
     archs: Sequence[str] = DEFAULT_MIX,
     mean_service_s: float = 3600.0,
     start_id: int = 0,
-) -> List[JobSubmit]:
-    """Poisson job arrivals with exponential service demands."""
+) -> Iterator[JobSubmit]:
+    """Poisson job arrivals with exponential service demands (lazy)."""
     rng = random.Random(seed)
     t = 0.0
-    events: List[JobSubmit] = []
     jid = start_id
     while True:
         t += rng.expovariate(arrival_rate_per_h / 3600.0)
@@ -49,26 +52,27 @@ def poisson_trace(
             break
         arch = rng.choice(list(archs))
         service = max(60.0, rng.expovariate(1.0 / mean_service_s))
-        events.append(
-            JobSubmit(time=t, job=make_job(jid, arch, service_s=service))
-        )
+        yield JobSubmit(time=t, job=make_job(jid, arch, service_s=service))
         jid += 1
-    return events
 
 
-def failure_trace(
+def poisson_trace(**kwargs) -> List[JobSubmit]:
+    """Materialized ``iter_poisson_trace`` (same arguments and events)."""
+    return list(iter_poisson_trace(**kwargs))
+
+
+def iter_failure_trace(
     *,
     n: int,
     seed: int = 0,
     duration_s: float = 4 * 3600.0,
     mtbf_node_s: float = 1e7,
     mttr_s: float = 1800.0,
-) -> List[Event]:
-    """Node failures over an n x n grid: cluster-level failure rate is
-    n^2 / mtbf_node_s; each failure schedules its recovery after an
-    exponential repair time."""
+) -> Iterator[Event]:
+    """Node failures over an n x n grid (lazy): cluster-level failure
+    rate is n^2 / mtbf_node_s; each failure schedules its recovery after
+    an exponential repair time."""
     rng = random.Random(seed ^ 0x5DEECE66D)
-    events: List[Event] = []
     t = 0.0
     rate = n * n / mtbf_node_s
     down: Dict[Tuple[int, int], float] = {}   # node -> repair time
@@ -84,12 +88,16 @@ def failure_trace(
         if not candidates:
             continue
         node = candidates[rng.randrange(len(candidates))]
-        events.append(NodeFail(time=t, node=node))
+        yield NodeFail(time=t, node=node)
         repair = t + max(60.0, rng.expovariate(1.0 / mttr_s))
         down[node] = repair
         if repair < duration_s:
-            events.append(NodeRecover(time=repair, node=node))
-    return events
+            yield NodeRecover(time=repair, node=node)
+
+
+def failure_trace(**kwargs) -> List[Event]:
+    """Materialized ``iter_failure_trace`` (same arguments and events)."""
+    return list(iter_failure_trace(**kwargs))
 
 
 def fig20_trace(

@@ -142,6 +142,81 @@ class JobAllocation:
         return len(self.rows) * len(self.cols)
 
 
+# -- column-bitmask helpers (shared with cluster.occupancy / placement) ----
+
+
+def iter_bits(mask: int):
+    """Yield the set bit positions of ``mask`` in ascending order."""
+    while mask:
+        low = mask & -mask
+        yield low.bit_length() - 1
+        mask ^= low
+
+
+def lowest_bits(mask: int, k: int) -> Tuple[int, ...]:
+    """The ``k`` lowest set bit positions of ``mask`` (== sorted(bits)[:k])."""
+    out: List[int] = []
+    for b in iter_bits(mask):
+        if len(out) == k:
+            break
+        out.append(b)
+    return tuple(out)
+
+
+def mask_of(cols: Sequence[int]) -> int:
+    m = 0
+    for c in cols:
+        m |= 1 << c
+    return m
+
+
+def allocate_multi_jobs_masks(
+    n: int, healthy_masks: Sequence[int], max_jobs: int = 8
+) -> List[JobAllocation]:
+    """Bitmask core of the Figure-20 greedy packer: ``healthy_masks[r]``
+    is the bitmask of available columns in row ``r``.  Column-set algebra
+    is ``&``/``bit_count`` instead of frozenset intersections; iteration
+    order and every comparison mirror the set-based reference
+    (``allocate_multi_jobs_ref``) exactly, so the proposals — and any
+    scheduling decision built on them — are identical (property-tested in
+    ``tests/test_occupancy.py``)."""
+    masks = list(healthy_masks)
+    jobs: List[JobAllocation] = []
+    while any(masks) and len(jobs) < max_jobs:
+        best: JobAllocation | None = None
+        rows_by_count = sorted(range(n), key=lambda r: -masks[r].bit_count())
+        for r0 in rows_by_count[: max(4, n // 4)]:
+            cols0 = masks[r0]
+            if not cols0:
+                continue
+            rows = [r0]
+            cols = cols0
+            cand = JobAllocation((r0,), tuple(iter_bits(cols)))
+            if best is None or cand.size > best.size:
+                best = cand
+            for r in rows_by_count:
+                if r in rows:
+                    continue
+                new_cols = cols & masks[r]
+                if new_cols.bit_count() * (len(rows) + 1) >= (
+                    cols.bit_count() * len(rows)
+                ):
+                    rows.append(r)
+                    cols = new_cols
+                    cand = JobAllocation(
+                        tuple(sorted(rows)), tuple(iter_bits(cols))
+                    )
+                    if cand.size > best.size:
+                        best = cand
+        if best is None or best.size == 0:
+            break
+        jobs.append(best)
+        cmask = mask_of(best.cols)
+        for r in best.rows:
+            masks[r] &= ~cmask
+    return jobs
+
+
 def allocate_multi_jobs(
     n: int, faults: Sequence[Coord], max_jobs: int = 8
 ) -> List[JobAllocation]:
@@ -150,7 +225,19 @@ def allocate_multi_jobs(
 
     The OCS constraint is per-job rectangularity over a subset of rows and
     columns (rows/cols need not be contiguous — circuit switching permutes
-    freely, Figure 20)."""
+    freely, Figure 20).  Thin wrapper over the bitmask core."""
+    full = (1 << n) - 1
+    masks = [full] * n
+    for r, c in set(faults):
+        masks[r] &= ~(1 << c)
+    return allocate_multi_jobs_masks(n, masks, max_jobs=max_jobs)
+
+
+def allocate_multi_jobs_ref(
+    n: int, faults: Sequence[Coord], max_jobs: int = 8
+) -> List[JobAllocation]:
+    """The seed frozenset implementation, kept as the equivalence-test
+    reference for ``allocate_multi_jobs_masks``."""
     healthy = {
         (r, c) for r in range(n) for c in range(n) if (r, c) not in set(faults)
     }

@@ -6,8 +6,9 @@ implement the standard *flow-level* steady-state model that reproduces the
 paper's throughput results (Fig. 14):
 
   * traffic = a demand matrix over chips (all-to-all, ring-collective, ...);
-  * each demand is routed over the topology graph (minimal routing; optional
-    2-way load-balanced for HyperX rows/columns via the two rail links);
+  * each demand is routed over the topology graph (minimal routing;
+    ``num_paths>=2`` adds 2-way load-balanced ECMP via successive
+    link-disjoint-ish shortest paths);
   * link load = sum of demand fractions crossing it / link capacity;
   * achievable per-chip throughput = 1 / max_link_load (normalized to the
     per-port injection bandwidth), the classical bottleneck bound the
@@ -17,6 +18,25 @@ paper's throughput results (Fig. 14):
 Chips are vertices (node, chip) where node is a topology coordinate and
 chip a position in the m x m mesh; intra-node links have capacity k x the
 inter-node links (the 2D-mesh-as-virtual-switch of §3.3.5).
+
+Execution engines (see ``core.compiled_flow``):
+
+* **compiled (default)** — every ``FlowNetwork`` is lowered to integer
+  vertex ids + CSR adjacency + capacity arrays; routing is frontier-array
+  multi-source BFS with seed-identical tie-breaking, and load accounting
+  is one sequential ``np.bincount`` over the demand-ordered edge stream.
+  Results are **bit-identical** to the original pure-Python dict engine
+  (kept below as ``route_demands_ecmp_reference`` for the parity tests)
+  while running orders of magnitude faster — the 4,096-chip all-to-all
+  sweep drops from minutes to seconds (see ``BENCH_simulator.json``).
+* **symmetry** — the canonical builders in ``compiled_flow``
+  (``build_compiled_railx_hyperx`` / ``build_compiled_torus2d`` /
+  ``build_compiled_fattree``) carry a node-translation automorphism
+  group; ``symmetric_alltoall_throughput`` routes one representative
+  source per automorphism class and reconstructs total per-edge loads
+  exactly over the group orbit, turning the O(N²) all-to-all sweep into
+  O(N · classes).  That is what evaluates Fig. 14 at the paper's
+  hyper-scale (>100K chips) operating points.
 """
 
 from __future__ import annotations
@@ -143,14 +163,38 @@ def shortest_paths_multi(
 def route_demands_ecmp(
     net: FlowNetwork,
     demands: Dict[Tuple[Vertex, Vertex], float],
-    num_paths: int = 2,
-    seed: int = 0,
+    num_paths: int = 1,
 ) -> Dict[Edge, float]:
     """Load per link routing each demand over up to ``num_paths`` link-
-    disjoint-ish shortest paths (successive BFS with inflated used links)."""
-    import random
+    disjoint-ish shortest paths (successive BFS passes that exclude links
+    already used for the same source; each demand splits evenly over the
+    paths found).
 
-    rng = random.Random(seed)
+    Runs on the vectorized compiled engine; ``num_paths=1`` (the default,
+    and the seed engine's actual behavior) is bit-identical to
+    ``route_demands_ecmp_reference``.
+    """
+    from .compiled_flow import CompiledNetwork, route_demands
+
+    cn = CompiledNetwork.from_flow_network(net)
+    vid = cn.vertex_id
+    id_demands = {
+        (vid[s], vid[t]): v for (s, t), v in demands.items()
+    }
+    load = route_demands(cn, id_demands, num_paths=num_paths)
+    out: Dict[Edge, float] = {}
+    verts = cn.vertex_of
+    for e in load.nonzero()[0]:
+        out[(verts[cn.edge_src[e]], verts[cn.nbr[e]])] = float(load[e])
+    return out
+
+
+def route_demands_ecmp_reference(
+    net: FlowNetwork,
+    demands: Dict[Tuple[Vertex, Vertex], float],
+) -> Dict[Edge, float]:
+    """The seed pure-Python engine (single shortest path per demand), kept
+    verbatim as the ground truth for the compiled engine's parity tests."""
     load: Dict[Edge, float] = defaultdict(float)
     by_src: Dict[Vertex, List[Tuple[Vertex, float]]] = defaultdict(list)
     for (s, t), v in demands.items():
@@ -179,9 +223,10 @@ def max_utilization(net: FlowNetwork, load: Dict[Edge, float]) -> float:
 
 
 def alltoall_throughput(
-    net: FlowNetwork,
-    chips: Sequence[Vertex],
-    injection_ports: float,
+    net,
+    chips: Optional[Sequence[Vertex]] = None,
+    injection_ports: float = 1.0,
+    num_paths: int = 1,
 ) -> float:
     """Steady-state all-to-all throughput per chip, normalized to
     flits/cycle/chip with the external link = 1 flit/cycle (Fig. 14).
@@ -189,14 +234,41 @@ def alltoall_throughput(
     Each chip injects `injection_ports` flits/cycle spread uniformly over
     all other chips; achievable fraction = 1 / max link utilization; the
     reported figure-of-merit is injection * min(1, 1/max_util).
+
+    ``net`` may be a ``FlowNetwork`` (``chips`` are vertices) or a
+    ``compiled_flow.CompiledNetwork`` (``chips`` are vertex ids, default
+    all chips).  ``num_paths=1`` runs the exact counting sweep —
+    bit-identical to the seed engine; ``num_paths>=2`` routes the full
+    demand matrix with load-balanced ECMP (small grids only).
     """
-    Nc = len(chips)
+    from .compiled_flow import (
+        CompiledNetwork,
+        alltoall_throughput_compiled,
+        route_demands,
+        max_utilization_compiled,
+    )
+
+    if isinstance(net, CompiledNetwork):
+        cn = net
+        chip_ids = None if chips is None else [int(c) for c in chips]
+    else:
+        cn = CompiledNetwork.from_flow_network(net)
+        if chips is None:
+            raise ValueError("chips is required for a FlowNetwork")
+        chip_ids = [cn.vertex_id[c] for c in chips]
+    if num_paths <= 1:
+        import numpy as np
+
+        ids = None if chip_ids is None else np.asarray(chip_ids, np.int64)
+        return alltoall_throughput_compiled(cn, injection_ports, chips=ids)
+    ids = cn.chips() if chip_ids is None else chip_ids
+    Nc = len(ids)
     per_pair = injection_ports / (Nc - 1)
     demands = {
-        (s, t): per_pair for s in chips for t in chips if s != t
+        (int(s), int(t)): per_pair for s in ids for t in ids if s != t
     }
-    load = route_demands_ecmp(net, demands)
-    util = max_utilization(net, load)
+    load = route_demands(cn, demands, num_paths=num_paths)
+    util = max_utilization_compiled(cn, load)
     if util <= 0:
         return injection_ports
     return injection_ports * min(1.0, 1.0 / util)

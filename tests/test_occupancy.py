@@ -313,8 +313,8 @@ def test_diff_circuits_keys_restriction():
 
 
 def test_rail_aware_occupied_from_index():
-    # rail_aware derives its occupied list from the index, not an O(n^2)
-    # membership scan; spot-check the derivation on a mixed grid
+    # rail_aware derives its proposals straight from the index's row
+    # masks, not an O(n^2) membership scan; spot-check on a mixed grid
     idx = OccupancyIndex(6)
     idx.occupy((1, 2), (3, 4))
     idx.fault((0, 0))
@@ -323,3 +323,97 @@ def test_rail_aware_occupied_from_index():
     alloc = POLICIES["rail_aware"](6, idx, 2, 2)
     ref = REFERENCE_POLICIES["rail_aware"](6, idx.free_set(), 2, 2)
     assert alloc == ref is not None
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 3: bitmask Figure-20 packer == frozenset reference, and the O(1)
+# occupied-node counter == the per-event walk
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30)
+@given(
+    n=st.integers(min_value=2, max_value=12),
+    blocked=st.lists(
+        st.tuples(
+            st.integers(min_value=0, max_value=11),
+            st.integers(min_value=0, max_value=11),
+        ),
+        max_size=60,
+    ),
+    max_jobs=st.integers(min_value=1, max_value=8),
+)
+def test_allocate_multi_jobs_masks_match_reference(n, blocked, max_jobs):
+    from repro.core.availability import (
+        allocate_multi_jobs,
+        allocate_multi_jobs_masks,
+        allocate_multi_jobs_ref,
+    )
+
+    faults = [(r % n, c % n) for r, c in blocked]
+    want = allocate_multi_jobs_ref(n, faults, max_jobs=max_jobs)
+    assert allocate_multi_jobs(n, faults, max_jobs=max_jobs) == want
+    full = (1 << n) - 1
+    masks = [full] * n
+    for r, c in set(faults):
+        masks[r] &= ~(1 << c)
+    assert allocate_multi_jobs_masks(n, masks, max_jobs=max_jobs) == want
+
+
+class WalkSyncScheduler(ClusterScheduler):
+    """The seed per-event occupancy sync: recount every running job."""
+
+    def _sync_occupancy(self):
+        self.metrics.set_occupancy(
+            self.recount_occupied_nodes(), self.healthy_nodes()
+        )
+
+
+def test_occupancy_counter_matches_walk():
+    def trace():
+        events = list(poisson_trace(seed=99, duration_s=6 * 3600.0,
+                                    arrival_rate_per_h=12.0,
+                                    mean_service_s=2000.0))
+        events += failure_trace(n=10, seed=99, duration_s=6 * 3600.0,
+                                mtbf_node_s=8e4, mttr_s=1000.0)
+        return events
+
+    fast = ClusterScheduler(CFG, n=10, policy="best_fit")
+    walk = WalkSyncScheduler(CFG, n=10, policy="best_fit")
+    mf = fast.run(trace())
+    mw = walk.run(trace())
+    assert _fingerprint(mf) == _fingerprint(mw)
+    assert mf.utilization == mw.utilization
+    assert mf.util_node_seconds == mw.util_node_seconds
+    assert mf.healthy_node_seconds == mw.healthy_node_seconds
+    assert mf.events_processed == mw.events_processed
+    # the incremental counter never drifts from a fresh recount
+    assert fast.occupied_nodes() == fast.recount_occupied_nodes()
+
+
+def test_rail_aware_policy_end_to_end_unchanged():
+    """Whole-scheduler equivalence for the rail_aware policy (its
+    proposal generator moved from frozensets to the bitmask packer)."""
+    def trace():
+        events = list(poisson_trace(seed=5, duration_s=4 * 3600.0,
+                                    arrival_rate_per_h=10.0,
+                                    mean_service_s=1800.0))
+        events += failure_trace(n=8, seed=5, duration_s=4 * 3600.0,
+                                mtbf_node_s=1e5, mttr_s=900.0)
+        return events
+
+    class RefRailAwareScheduler(ClusterScheduler):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            ref = REFERENCE_POLICIES["rail_aware"]
+            self.policy = (
+                lambda n, occ, rows_req, cols_req:
+                ref(n, occ.free_set(), rows_req, cols_req)
+            )
+
+    new = ClusterScheduler(CFG, n=8, policy="rail_aware")
+    old = RefRailAwareScheduler(CFG, n=8, policy="rail_aware")
+    mn = new.run(trace())
+    mo = old.run(trace())
+    assert _fingerprint(mn) == _fingerprint(mo)
+    assert mn.utilization == mo.utilization

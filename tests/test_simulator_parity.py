@@ -1,0 +1,243 @@
+"""ISSUE 3: vectorized flow engine == seed dict engine, exactly.
+
+* the compiled engine (CSR + frontier-array BFS + bincount accounting)
+  reproduces the seed pure-Python engine's loads, utilizations and
+  throughputs **bit for bit** on the Fig. 14 grids and on randomized
+  demand matrices over small HyperX/Torus instances;
+* the scipy C-BFS fast path and the portable NumPy kernel agree;
+* symmetry mode (one representative source per automorphism class,
+  loads reconstructed over the translation orbit) equals the brute-force
+  O(N²) sweep exactly — integer path counts and the bottleneck
+  utilization — on canonical HyperX/Torus/fat-tree networks;
+* ``num_paths>=2`` implements real 2-way load-balanced ECMP (the seed's
+  dead parameter), splitting demands over link-disjoint paths.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import compiled_flow as cf
+from repro.core.compiled_flow import (
+    CompiledNetwork,
+    alltoall_edge_counts,
+    build_compiled_fattree,
+    build_compiled_railx_hyperx,
+    build_compiled_torus2d,
+    symmetric_alltoall_counts,
+    symmetric_alltoall_throughput,
+    utilization_from_counts,
+)
+from repro.core.simulator import (
+    FlowNetwork,
+    alltoall_throughput,
+    build_fattree_network,
+    build_railx_hyperx_network,
+    build_torus2d_network,
+    max_utilization,
+    route_demands_ecmp,
+    route_demands_ecmp_reference,
+)
+
+
+def _chips(scale, m):
+    return [
+        (X, Y, x, y)
+        for X in range(scale)
+        for Y in range(scale)
+        for x in range(m)
+        for y in range(m)
+    ]
+
+
+def _alltoall_reference(net, chips, inj):
+    """The seed ``alltoall_throughput``, verbatim, on the seed engine."""
+    per_pair = inj / (len(chips) - 1)
+    demands = {(s, t): per_pair for s in chips for t in chips if s != t}
+    util = max_utilization(net, route_demands_ecmp_reference(net, demands))
+    if util <= 0:
+        return inj
+    return inj * min(1.0, 1.0 / util)
+
+
+# ---------------------------------------------------------------------------
+# Exact mode == seed engine, bit for bit
+# ---------------------------------------------------------------------------
+
+
+FIG14_GRIDS = [
+    ("railx_3_2_inj8", lambda: build_railx_hyperx_network(3, 2, 2.0), (3, 2), 8.0),
+    ("railx_5_2_inj4", lambda: build_railx_hyperx_network(5, 2, 2.0), (5, 2), 4.0),
+    ("torus_5_2_inj4", lambda: build_torus2d_network(5, 2, 2.0), (5, 2), 4.0),
+    ("railx_k1", lambda: build_railx_hyperx_network(3, 2, 1.0), (3, 2), 4.0),
+    ("railx_k2", lambda: build_railx_hyperx_network(3, 2, 2.0), (3, 2), 4.0),
+    ("railx_k4", lambda: build_railx_hyperx_network(3, 2, 4.0), (3, 2), 4.0),
+]
+
+
+@pytest.mark.parametrize("name,build,shape,inj", FIG14_GRIDS,
+                         ids=[g[0] for g in FIG14_GRIDS])
+def test_fig14_throughput_bit_identical(name, build, shape, inj):
+    net = build()
+    chips = _chips(*shape)
+    assert alltoall_throughput(net, chips, inj) == \
+        _alltoall_reference(net, chips, inj)
+
+
+def test_fattree_throughput_bit_identical():
+    net = build_fattree_network(16, ports=4.0)
+    chips = [("chip", i) for i in range(16)]
+    assert alltoall_throughput(net, chips, 4.0) == \
+        _alltoall_reference(net, chips, 4.0)
+
+
+def test_route_demands_randomized_parity():
+    """Randomized demand matrices: identical load dict (keys and float
+    values), hence identical max utilization."""
+    rng = random.Random(0xC0FFEE)
+    for trial in range(25):
+        scale = rng.randint(3, 5)
+        build = build_railx_hyperx_network if trial % 2 else build_torus2d_network
+        net = build(scale, 2, 2.0)
+        chips = _chips(scale, 2)
+        demands = {}
+        for _ in range(rng.randint(1, 40)):
+            s, t = rng.sample(chips, 2)
+            demands[(s, t)] = demands.get((s, t), 0.0) + rng.random() * 3.0
+        got = route_demands_ecmp(net, demands)
+        want = dict(route_demands_ecmp_reference(net, demands))
+        assert got == want, trial
+        assert max_utilization(net, got) == max_utilization(net, want)
+
+
+def test_scipy_and_numpy_sweeps_agree():
+    """The C-BFS fast path and the portable NumPy kernel produce the
+    same integer path counts (both replicate the seed tie-breaking)."""
+    if cf._sp_bfs_order is None:
+        pytest.skip("scipy not available")
+    for build, scale in (
+        (build_railx_hyperx_network, 4),
+        (build_torus2d_network, 5),
+    ):
+        cn = CompiledNetwork.from_flow_network(build(scale, 2, 2.0))
+        k_scipy = alltoall_edge_counts(cn)
+        orig = cf._sp_bfs_order
+        cf._sp_bfs_order = None
+        try:
+            k_numpy = alltoall_edge_counts(cn)
+        finally:
+            cf._sp_bfs_order = orig
+        assert np.array_equal(k_scipy, k_numpy)
+
+
+def test_unreachable_raises_like_seed():
+    net = FlowNetwork()
+    net.add_link("a", "b", 1.0)
+    net.add_link("c", "d", 1.0)
+    with pytest.raises(ValueError, match="unreachable"):
+        route_demands_ecmp(net, {("a", "c"): 1.0})
+    with pytest.raises(ValueError, match="unreachable"):
+        route_demands_ecmp_reference(net, {("a", "c"): 1.0})
+
+
+# ---------------------------------------------------------------------------
+# Symmetry mode == brute force, exactly
+# ---------------------------------------------------------------------------
+
+
+CANONICAL = [
+    ("hyperx4", lambda: build_compiled_railx_hyperx(4, 2, 2.0)),
+    ("hyperx5", lambda: build_compiled_railx_hyperx(5, 2, 2.0)),
+    ("hyperx_m3", lambda: build_compiled_railx_hyperx(6, 3, 2.0)),  # step 3
+    ("torus4", lambda: build_compiled_torus2d(4, 2, 2.0)),
+    ("torus5", lambda: build_compiled_torus2d(5, 2, 2.0)),
+    ("fattree", lambda: build_compiled_fattree(24, ports=8.0)),
+]
+
+
+@pytest.mark.parametrize("name,build", CANONICAL, ids=[c[0] for c in CANONICAL])
+def test_symmetry_equals_bruteforce(name, build):
+    cn = build()
+    re, K = symmetric_alltoall_counts(cn)
+    K_full = alltoall_edge_counts(cn)
+    # integer path counts agree edge for edge on the representatives...
+    assert np.array_equal(K_full[re], K)
+    # ...and the representatives cover every edge orbit: the bottleneck
+    # utilization over the representatives equals the global one
+    per_pair = 8.0 / (cn.chips().size - 1)
+    assert utilization_from_counts(K, cn.cap[re], per_pair, sequential=False) \
+        == utilization_from_counts(K_full, cn.cap, per_pair, sequential=False)
+
+
+def test_symmetry_throughput_scaling_railx_vs_torus():
+    """Fig. 14 at scale: RailX stays near the injection-limited bound
+    while the torus collapses with diameter (paper §6.1.2)."""
+    rx = symmetric_alltoall_throughput(
+        build_compiled_railx_hyperx(16, 2, 2.0), 8.0
+    )
+    tr = symmetric_alltoall_throughput(
+        build_compiled_torus2d(16, 2, 2.0), 8.0
+    )
+    assert rx > 1.0 > tr
+    assert rx > 4 * tr
+    # the torus keeps collapsing as the ring diameter grows
+    tr8 = symmetric_alltoall_throughput(build_compiled_torus2d(8, 2, 2.0), 8.0)
+    assert tr < tr8
+
+
+def test_validate_symmetry_rejects_broken_order():
+    """The slot-preservation validator must catch a non-canonical
+    adjacency ordering (here: one vertex's slots swapped by hand)."""
+    cn = build_compiled_railx_hyperx(4, 2, 2.0)
+    v = 5
+    lo = int(cn.indptr[v])
+    cn.nbr[lo], cn.nbr[lo + 1] = cn.nbr[lo + 1], cn.nbr[lo]
+    with pytest.raises(AssertionError):
+        cf._validate_symmetry(cn)
+
+
+# ---------------------------------------------------------------------------
+# 2-way load-balanced ECMP (num_paths >= 2)
+# ---------------------------------------------------------------------------
+
+
+def test_ecmp_two_paths_split_across_disjoint_routes():
+    net = FlowNetwork()
+    net.add_link("s", "a", 1.0)
+    net.add_link("a", "t", 1.0)
+    net.add_link("s", "b", 1.0)
+    net.add_link("b", "t", 1.0)
+    one = route_demands_ecmp(net, {("s", "t"): 1.0}, num_paths=1)
+    two = route_demands_ecmp(net, {("s", "t"): 1.0}, num_paths=2)
+    # single path rides the first adjacency ("a"); 2-way splits 50/50
+    assert one[("s", "a")] == 1.0 and ("s", "b") not in one
+    assert two[("s", "a")] == 0.5 and two[("s", "b")] == 0.5
+    assert two[("a", "t")] == 0.5 and two[("b", "t")] == 0.5
+    # both routings carry the full demand
+    assert sum(v for (x, _), v in one.items() if x == "s") == 1.0
+    assert sum(v for (x, _), v in two.items() if x == "s") == 1.0
+
+
+def test_ecmp_falls_back_to_fewer_paths_when_disjointness_runs_out():
+    net = FlowNetwork()                # single chain: no second path
+    net.add_link("s", "a", 1.0)
+    net.add_link("a", "t", 1.0)
+    two = route_demands_ecmp(net, {("s", "t"): 2.0}, num_paths=2)
+    assert two[("s", "a")] == 2.0 and two[("a", "t")] == 2.0
+
+
+def test_ecmp_spreads_load_on_hyperx():
+    """2-way LB on a HyperX grid: demands split over more distinct links
+    and the bottleneck does not get worse on this instance."""
+    net = build_railx_hyperx_network(4, 2, 2.0)
+    chips = _chips(4, 2)
+    rng = random.Random(7)
+    demands = {}
+    for _ in range(30):
+        s, t = rng.sample(chips, 2)
+        demands[(s, t)] = demands.get((s, t), 0.0) + 1.0
+    one = route_demands_ecmp(net, demands, num_paths=1)
+    two = route_demands_ecmp(net, demands, num_paths=2)
+    assert len(two) > len(one)          # strictly more links carry load
+    assert max_utilization(net, two) <= max_utilization(net, one) + 1e-9
