@@ -12,12 +12,21 @@ Measures, at 32x32, 64x64 and 128x128 node grids:
   how much work the occupancy watermark and the shape-memoized
   circuit/goodput caches are saving.
 
+It also runs the ISSUE-4 **policy sweep** (16x16, one hot tiered trace,
+identical seeds across configs): plain FIFO (tiers stripped) vs
+tiered+preemption vs +gang scoring vs +re-expansion, recording per-tier
+queueing delays, preemption/expansion counts and the OCS churn
+(``reconfig_rounds`` / ``circuits_flipped``) each policy adds or saves.
+Results land in the ``policy_sweep`` section of ``BENCH_cluster.json``.
+
   PYTHONPATH=src python benchmarks/bench_cluster.py            # full run
   PYTHONPATH=src python benchmarks/bench_cluster.py --smoke    # CI: 16x16
 
-``--smoke`` runs a 16x16 grid in a few seconds, checks basic trace
-invariants, and does NOT rewrite BENCH_cluster.json — it exists so CI can
-catch perf-affecting regressions (a hung loop, a broken cache) quickly.
+``--smoke`` runs a 16x16 grid plus a short tiered-preemption sweep in a
+few seconds, checks trace + policy invariants (preemption must cut the
+top tier's queueing delay; gang scoring must cut circuit flips;
+re-expansion must trigger), and does NOT rewrite BENCH_cluster.json — it
+exists so CI can catch perf- or policy-affecting regressions quickly.
 """
 
 from __future__ import annotations
@@ -90,6 +99,119 @@ def run_grid(side: int, full: bool) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# ISSUE-4 policy sweep: fifo vs tiered+preempt vs +gang vs +re-expand
+# ---------------------------------------------------------------------------
+
+POLICY_CONFIGS = (
+    ("fifo", dict(), True),                 # tiers stripped: seed behavior
+    ("tiered_preempt", dict(preemption=True), False),
+    ("tiered_preempt_gang",
+     dict(preemption=True, gang_scoring=True), False),
+    ("tiered_preempt_gang_expand",
+     dict(preemption=True, gang_scoring=True, re_expansion=True), False),
+)
+
+
+def policy_sweep(side: int = 16, duration_h: float = 24.0, seed: int = 1234):
+    """Run the four policy configs over one hot tiered trace (identical
+    seeds — the fifo baseline sees the very same jobs with tiers zeroed)
+    and report per-tier delays + policy counters per config."""
+    import dataclasses
+    import itertools
+
+    from repro.cluster import (
+        ClusterScheduler,
+        iter_failure_trace,
+        iter_poisson_trace,
+    )
+    from repro.core.topology import RailXConfig
+
+    duration = duration_h * 3600.0
+    events = list(itertools.chain(
+        iter_poisson_trace(
+            seed=seed, duration_s=duration, arrival_rate_per_h=24.0,
+            mean_service_s=2 * 3600.0, tier_weights=(8, 2, 1),
+        ),
+        iter_failure_trace(
+            n=side, seed=seed, duration_s=duration,
+            mtbf_node_s=2e5, mttr_s=4 * 3600.0,
+        ),
+    ))
+    tier_of = {
+        ev.job.job_id: ev.job.tier for ev in events if hasattr(ev, "job")
+    }
+    tiers = sorted(set(tier_of.values()))
+    rows = []
+    for name, opts, strip in POLICY_CONFIGS:
+        evs = events
+        if strip:
+            evs = [
+                dataclasses.replace(
+                    ev, job=dataclasses.replace(ev.job, tier=0))
+                if hasattr(ev, "job") else ev
+                for ev in events
+            ]
+        cfg = RailXConfig(m=4, n=4, R=2 * side)
+        sched = ClusterScheduler(
+            cfg, n=side, policy="best_fit", goodput_model="flow",
+            validate_circuits=False, **opts,
+        )
+        t0 = time.perf_counter()
+        m = sched.run(evs, until=duration)
+        wall = time.perf_counter() - t0
+        s = m.summary()
+        # per-tier delays from the *trace's* tier assignment, so the
+        # stripped fifo baseline is comparable tier by tier
+        delay_by_tier = {}
+        for t in tiers:
+            d = [
+                r.queueing_delay for jid, r in m.records.items()
+                if tier_of.get(jid) == t and r.queueing_delay is not None
+            ]
+            delay_by_tier[t] = round(sum(d) / len(d), 1) if d else 0.0
+        rows.append({
+            "config": name,
+            "grid": f"{side}x{side}",
+            "events": s["events"],
+            "wall_s": round(wall, 4),
+            "finished": s["finished"],
+            "utilization": s["utilization"],
+            "mean_goodput": s["mean_goodput"],
+            "mean_queue_delay_s": s["mean_queue_delay_s"],
+            "queue_delay_by_tier_s": delay_by_tier,
+            "reconfig_rounds": s["reconfig_rounds"],
+            "circuits_flipped": s["circuits_flipped"],
+            "preemptions": m.preemptions,
+            "expansions": m.expansions,
+            "run_segments": m.policy_summary()["run_segments"],
+        })
+        top = max(tiers)
+        print(
+            f"bench_cluster_policy_{name},{rows[-1]['wall_s'] * 1000:.1f},"
+            f"tier{top}_delay={delay_by_tier[top]};"
+            f"preempt={m.preemptions};expand={m.expansions};"
+            f"flips={s['circuits_flipped']};util={s['utilization']}"
+        )
+    return rows
+
+
+def check_policy_sweep(rows) -> None:
+    """Invariants the sweep must show (CI smoke + full run)."""
+    by = {r["config"]: r for r in rows}
+    fifo, pre = by["fifo"], by["tiered_preempt"]
+    gang, exp = by["tiered_preempt_gang"], by["tiered_preempt_gang_expand"]
+    top = max(int(t) for t in fifo["queue_delay_by_tier_s"])
+    assert pre["preemptions"] > 0, "preemption never triggered"
+    assert (
+        pre["queue_delay_by_tier_s"][top] < fifo["queue_delay_by_tier_s"][top]
+    ), "preemption failed to cut the top tier's queueing delay"
+    assert gang["circuits_flipped"] < pre["circuits_flipped"], (
+        "gang scoring failed to cut circuit flips"
+    )
+    assert exp["expansions"] > 0, "re-expansion never triggered"
+
+
 def bench(sides) -> list:
     rows = []
     for side in sides:
@@ -122,12 +244,24 @@ def main() -> None:
             assert row["reconfig_rounds"] > 0, f"no reconfigurations: {row}"
         full_row = next(r for r in rows if r["mode"] == "full")
         assert 0.0 < full_row["mean_goodput"] <= 1.0, full_row
+        # tiered-preemption scenario: policy regressions fail loudly in CI
+        policy_rows = policy_sweep(side=16, duration_h=8.0)
+        check_policy_sweep(policy_rows)
         print("smoke ok")
         return
 
     rows = bench(FULL_SIDES)
+    policy_rows = policy_sweep(side=16, duration_h=24.0)
+    check_policy_sweep(policy_rows)
     with open(OUT, "w") as f:
-        json.dump({"bench": "cluster", "rows": rows}, f, indent=2)
+        json.dump(
+            {
+                "bench": "cluster",
+                "rows": rows,
+                "policy_sweep": {"grid": "16x16", "rows": policy_rows},
+            },
+            f, indent=2,
+        )
     print(f"wrote {os.path.relpath(OUT)}")
 
 

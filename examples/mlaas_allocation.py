@@ -6,6 +6,14 @@ around them (every placement's circuit plan is validated against the
 core.topology ring / all-to-all invariants; see
 ``ClusterScheduler(validate_circuits=True)``).
 
+Act two demonstrates the ISSUE-4 policy engine on the same grid: a
+saturated cluster of best-effort (tier-0) jobs takes a production
+(tier-2) submission — preemption checkpoint-evicts the cheapest victims
+so the SLO job starts instantly; a node failure shrinks a job elastically
+and re-expansion grows it back once the node recovers; gang scoring
+steers repeat shapes onto their old rectangles so the OCS reuses the
+still-programmed circuits (near-zero mirror strokes).
+
   PYTHONPATH=src python examples/mlaas_allocation.py
 """
 
@@ -88,5 +96,57 @@ def main():
           "all-to-all invariants before programming.")
 
 
+def policy_demo():
+    """Act two: preemption, re-expansion and gang scoring (ISSUE 4)."""
+    cfg = RailXConfig(m=4, n=4, R=64)
+    sched = ClusterScheduler(
+        cfg, n=N, policy="best_fit",
+        preemption=True, gang_scoring=True, re_expansion=True,
+    )
+    filler = ParallelismPlan(tp=8, cp=2, ep=1, dp=4, pp=2)     # 2x8 nodes
+    big = ParallelismPlan(tp=8, cp=2, ep=1, dp=8, pp=2)        # 2x16 nodes
+    events = [
+        JobSubmit(time=0.0, job=make_job(0, "qwen3-8b", plan=big,
+                                         service_s=30_000.0))
+    ]
+    # saturate the rest of the grid with best-effort tier-0 jobs
+    for i in range(1, 15):
+        events.append(JobSubmit(
+            time=1.0 + i,
+            job=make_job(i, "qwen3-8b", plan=filler, service_s=12_000.0)))
+    # a production SLO job arrives on the full grid: preemption territory
+    events.append(JobSubmit(
+        time=600.0,
+        job=make_job(90, "qwen3-8b", plan=filler, service_s=4_000.0,
+                     tier=2)))
+    sched.run(events, until=700.0)
+    m = sched.metrics
+    print("\n--- policy engine (preemption / gang / re-expansion) ---")
+    print(f"t=700: SLO job queue delay {m.records[90].queueing_delay:.0f} s, "
+          f"{m.preemptions} preemption(s), "
+          f"{len(sched.backlog)} checkpoint-evicted job(s) requeued")
+
+    # a failure inside job 0's rectangle forces an elastic shrink (the
+    # grid is too full to migrate); the repair lets re-expansion restore
+    # the original dp degree
+    rect = sched.running[0].alloc
+    target = (rect.rows[0], rect.cols[0])
+    sched.run([NodeFail(time=800.0, node=target)], until=900.0)
+    r0 = m.records[0]
+    print(f"t=900: failure at {target} -> job 0 shrank x{r0.shrinks} "
+          f"to {r0.nodes} nodes (plan dp={r0.job.plan.dp})")
+    sched.run([NodeRecover(time=5_000.0, node=target)])
+    print(f"drained: job 0 expanded x{r0.expansions} back to "
+          f"{r0.nodes} nodes (plan dp={r0.job.plan.dp}), "
+          f"finished at t={r0.finish_t:.0f}")
+    ps = m.policy_summary()
+    print(f"policy summary: {ps['preemptions']} preemptions, "
+          f"{ps['expansions']} expansions, "
+          f"queue delay by tier {ps['queue_delay_by_tier']}")
+    assert m.records[90].queueing_delay == 0.0
+    assert r0.expansions >= 1 and r0.job.plan == big
+
+
 if __name__ == "__main__":
     main()
+    policy_demo()

@@ -7,6 +7,18 @@ with different shapes and parallelism strategies share one
 reconfigurable fabric; failures are worked around by re-programming the
 OCS layer (paper §6.6, §7).
 
+The **policy engine** (ISSUE 4; every feature off by default, in which
+case scheduling is byte-identical to the plain FIFO scheduler) adds
+MLaaS operating policies on top of the mechanisms: SLO tiers on
+``JobSpec`` with a tier-aware backlog (``backlog.TieredBacklog``),
+submit-time **preemption** of minimal cheapest-first lower-tier victim
+sets, topology-aware **gang scoring** (place jobs onto rows/columns
+whose OCS switch groups already hold circuits, with lazy teardown and
+orphan-circuit reuse so repeat shapes cost ~zero mirror strokes), and
+**re-expansion** of elastically shrunken jobs once capacity frees.  See
+``ClusterScheduler(preemption=..., gang_scoring=..., re_expansion=...)``
+and the policy sweep in ``benchmarks/bench_cluster.py``.
+
 Performance notes (the event loop scales to 128x128 node grids)
 ---------------------------------------------------------------
 
@@ -41,6 +53,7 @@ event.  The invariants each structure maintains:
   policy scan with an O(n) row-popcount necessary condition.
 """
 
+from .backlog import TieredBacklog
 from .events import (
     Event,
     EventQueue,
@@ -57,13 +70,14 @@ from .jobs import (
     model_spec_from_config,
     plan_job_mapping,
 )
-from .metrics import GoodputCache, TimelineMetrics, estimate_goodput
+from .metrics import GoodputCache, RunSegment, TimelineMetrics, estimate_goodput
 from .occupancy import OccupancyIndex
 from .placement import (
     POLICIES,
     REFERENCE_POLICIES,
     best_fit,
     first_fit,
+    gang_scored_fit,
     get_policy,
     rail_aware,
 )
@@ -106,7 +120,9 @@ __all__ = [
     "REFERENCE_POLICIES",
     "ReconfigCostModel",
     "ReconfigPlan",
+    "RunSegment",
     "SwitchPatch",
+    "TieredBacklog",
     "TimelineMetrics",
     "apply_plan",
     "best_fit",
@@ -117,6 +133,7 @@ __all__ = [
     "failure_trace",
     "fig20_trace",
     "first_fit",
+    "gang_scored_fit",
     "get_policy",
     "iter_failure_trace",
     "iter_poisson_trace",

@@ -57,6 +57,7 @@ class JobSpec:
     shape: WorkloadShape
     service_s: float              # seconds of work at goodput = 1.0
     min_nodes: int = 1            # elastic floor: below this, migrate not shrink
+    tier: int = 0                 # SLO/priority tier; higher = more important
 
     @property
     def chips(self) -> int:
@@ -132,6 +133,7 @@ def make_job(
     service_s: float = 3600.0,
     min_nodes: int = 1,
     shape_name: str = "train_4k",
+    tier: int = 0,
 ) -> JobSpec:
     plan = plan or default_plan(arch)
     shape = WorkloadShape(
@@ -145,4 +147,5 @@ def make_job(
         shape=shape,
         service_s=service_s,
         min_nodes=min_nodes,
+        tier=tier,
     )

@@ -116,8 +116,19 @@ def estimate_goodput(
         need_y = math.prod(
             s.scale for s in mapping.specs if s.phys == "Y"
         )
-        keep = max(1, need_y, max_flow_nodes // max(1, len(alloc.cols)))
-        alloc = JobAllocation(alloc.rows[:keep], alloc.cols)
+        keep_r = max(1, need_y, max_flow_nodes // max(1, len(alloc.cols)))
+        rows = alloc.rows[:keep_r]
+        cols = alloc.cols
+        if keep_r * len(cols) > max_flow_nodes:
+            # mirror for column-heavy (X-extent) allocations: cols are
+            # replicated lines for the Y specs but ring members for the X
+            # specs, so never trim below the X split's required extent
+            need_x = math.prod(
+                s.scale for s in mapping.specs if s.phys == "X"
+            )
+            keep_c = max(1, need_x, max_flow_nodes // max(1, keep_r))
+            cols = cols[:keep_c]
+        alloc = JobAllocation(rows, cols)
     net = build_job_network(cfg, mapping, alloc)
 
     demands: Dict[Tuple[Coord, Coord], float] = {}
@@ -218,20 +229,56 @@ class GoodputCache:
 
 
 @dataclasses.dataclass
+class RunSegment:
+    """One completed run segment of a job: a placement's goodput/footprint
+    and the seconds of goodput-1.0 work it actually executed."""
+
+    goodput: float
+    nodes: int
+    work_s: float                 # work executed in this segment (g = 1.0)
+
+
+@dataclasses.dataclass
 class JobRecord:
     job: JobSpec
     submit_t: float
     start_t: Optional[float] = None
     finish_t: Optional[float] = None
-    nodes: int = 0
-    goodput: float = 1.0
+    nodes: int = 0                # footprint of the latest placement
+    goodput: float = 1.0          # goodput of the latest placement
     reconfig_downtime_s: float = 0.0
     migrations: int = 0
     shrinks: int = 0
+    expansions: int = 0
+    preemptions: int = 0          # times this job was preemption-evicted
+    segments: List[RunSegment] = dataclasses.field(default_factory=list)
 
     @property
     def queueing_delay(self) -> Optional[float]:
         return None if self.start_t is None else self.start_t - self.submit_t
+
+    @property
+    def segment_count(self) -> int:
+        return len(self.segments)
+
+    def end_segment(self, goodput: float, nodes: int, work_s: float) -> None:
+        """Record a finished run segment (called at finish/evict time, when
+        the executed work is known)."""
+        self.segments.append(RunSegment(goodput, nodes, work_s))
+
+    def weighted_goodput(self) -> float:
+        """Work-weighted mean goodput over completed run segments.
+
+        ``goodput`` alone is the *latest* placement's value; a job that
+        migrated or shrank ran earlier segments at different goodputs, and
+        averaging only the final value misreports the service the job
+        actually received.  Falls back to the latest placement's goodput
+        while no segment has completed (job still in its first segment).
+        """
+        total = sum(s.work_s for s in self.segments)
+        if total <= 0:
+            return self.goodput
+        return sum(s.goodput * s.work_s for s in self.segments) / total
 
 
 @dataclasses.dataclass
@@ -248,6 +295,8 @@ class TimelineMetrics:
     total_downtime_s: float = 0.0
     placement_attempts: int = 0            # _try_place calls (incl. gated-out)
     placement_scans: int = 0               # attempts that ran a policy scan
+    preemptions: int = 0                   # victim evictions (policy engine)
+    expansions: int = 0                    # shrunken jobs grown back
     circuit_cache_hits: int = 0
     circuit_cache_misses: int = 0
     goodput_cache_hits: int = 0
@@ -273,16 +322,44 @@ class TimelineMetrics:
             return 0.0
         return self.util_node_seconds / self.healthy_node_seconds
 
-    def mean_queueing_delay(self) -> float:
+    def mean_queueing_delay(self, tier: Optional[int] = None) -> float:
+        """Mean submit->first-placement delay, optionally for one SLO tier."""
         delays = [
             r.queueing_delay for r in self.records.values()
             if r.queueing_delay is not None
+            and (tier is None or r.job.tier == tier)
         ]
         return sum(delays) / len(delays) if delays else 0.0
 
     def mean_goodput(self) -> float:
-        g = [r.goodput for r in self.records.values() if r.start_t is not None]
+        """Mean per-job goodput, each job work-weighted over its run
+        segments (a migrated/shrunk job no longer reports only its final
+        segment's goodput)."""
+        g = [
+            r.weighted_goodput() for r in self.records.values()
+            if r.start_t is not None
+        ]
         return sum(g) / len(g) if g else 0.0
+
+    def policy_summary(self) -> Dict[str, object]:
+        """Policy-engine figures (separate from :meth:`summary` so the
+        default-trace summary keys stay exactly the seed set)."""
+        tiers = sorted({r.job.tier for r in self.records.values()})
+        return {
+            "preemptions": self.preemptions,
+            "expansions": self.expansions,
+            "run_segments": sum(r.segment_count for r in self.records.values()),
+            "queue_delay_by_tier": {
+                t: round(self.mean_queueing_delay(tier=t), 3) for t in tiers
+            },
+            "finished_by_tier": {
+                t: sum(
+                    1 for r in self.records.values()
+                    if r.job.tier == t and r.finish_t is not None
+                )
+                for t in tiers
+            },
+        }
 
     def summary(self) -> Dict[str, float]:
         finished = sum(1 for r in self.records.values() if r.finish_t is not None)

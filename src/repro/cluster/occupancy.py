@@ -126,6 +126,17 @@ class OccupancyIndex:
 
     # -- construction helpers ----------------------------------------------
 
+    def clone(self) -> "OccupancyIndex":
+        """Independent copy (O(n)); used to trial hypothetical placements
+        — preemption victim selection and re-expansion probe the
+        deterministic policies on a clone before touching real state."""
+        idx = OccupancyIndex(self.n)
+        idx._occ = list(self._occ)
+        idx._fault = list(self._fault)
+        idx.version = self.version
+        idx.free_count = self.free_count
+        return idx
+
     @classmethod
     def from_free_set(cls, n: int, free: Set[Coord]) -> "OccupancyIndex":
         """Index whose free set equals ``free`` (everything else occupied)."""

@@ -128,6 +128,42 @@ def best_fit(
     return best
 
 
+def gang_scored_fit(
+    n: int,
+    occ: OccupancyIndex,
+    rows_req: int,
+    cols_req: int,
+    row_weight: Dict[int, int],
+    col_weight: Dict[int, int],
+) -> Optional[JobAllocation]:
+    """Topology-aware gang placement: prefer rectangles sharing OCS
+    switch groups with circuits already programmed on the fabric.
+
+    A job's circuits live on the switches of its rows (X rails) and
+    columns (Y rails); ``row_weight``/``col_weight`` count programmed
+    switch keys per line (live or lazily-retained — see the scheduler's
+    orphan tracking).  Maximizing the summed weight steers repeat shapes
+    back onto the lines whose switches already hold their rings, so the
+    install diff degenerates to few/no mirror strokes.  Ties break on the
+    ``best_fit`` fragmentation score, then on seed order — fully
+    deterministic.
+    """
+    per_row = _rows_by_free(n, occ)
+    best: Optional[JobAllocation] = None
+    best_key: Optional[Tuple[int, int]] = None
+    for seed in range(len(per_row)):
+        alloc = _grow_from_seed(per_row, seed, rows_req, cols_req)
+        if alloc is None:
+            continue
+        affinity = sum(row_weight.get(r, 0) for r in alloc.rows) + sum(
+            col_weight.get(c, 0) for c in alloc.cols
+        )
+        key = (-affinity, _fragmentation_score(per_row, alloc))
+        if best_key is None or key < best_key:
+            best, best_key = alloc, key
+    return best
+
+
 def rail_aware(
     n: int, occ: OccupancyIndex, rows_req: int, cols_req: int
 ) -> Optional[JobAllocation]:

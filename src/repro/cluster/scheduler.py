@@ -11,11 +11,12 @@ node-recover events.  The scheduler owns:
   and uninstalls diff only the switch keys a job's target touches and
   maintain per-switch circuit refcounts, so neither pays for the size of
   the whole fabric;
-* a FIFO backlog served by a pluggable placement policy, with a
-  free-capacity watermark per backlogged job: a job is only re-attempted
-  once the free set has changed since its last failed attempt (the
-  policies are deterministic, so an unchanged free set is a guaranteed
-  re-failure).
+* a tier-aware backlog (``backlog.TieredBacklog``) served by a pluggable
+  placement policy, with a free-capacity watermark per backlogged job: a
+  job is only re-attempted once the free set has changed since its last
+  failed attempt (the policies are deterministic, so an unchanged free
+  set is a guaranteed re-failure).  With a single tier (the default) the
+  backlog is exactly the seed's FIFO list.
 
 Failure handling (§6.6): when a node inside a running job's rectangle
 fails, the scheduler tries, in order,
@@ -26,6 +27,27 @@ fails, the scheduler tries, in order,
    degree halved (the ``launch/elastic`` recovery semantics), as long as
    the shrunken footprint stays >= ``job.min_nodes``;
 3. **requeue** — back to the backlog with its remaining work.
+
+Policy engine (§6.6, §7 MLaaS operation; all off by default, in which
+case scheduling is byte-identical to the plain FIFO scheduler):
+
+* **preemption** (``preemption=True``) — a submit-time placement failure
+  for a tier-t job may checkpoint-evict a minimal, deterministically
+  chosen set of strictly-lower-tier running jobs (cheapest first: lowest
+  tier, least remaining work x footprint); victims requeue at the front
+  of their own tier with their remaining work.
+* **gang scoring** (``gang_scoring=True``) — placement prefers
+  rectangles whose rows/columns share OCS switch groups already holding
+  circuits (``placement.gang_scored_fit``), and circuit teardown becomes
+  lazy: a departing job's circuits stay programmed as *orphans* (zero
+  mirror strokes) until a later install either reuses them verbatim
+  (zero-flip placement for repeat shapes) or evicts the ones whose ports
+  it needs.  Global per-switch port discipline is preserved — orphans
+  conflicting with a new target are removed in the same patch.
+* **re-expansion** (``re_expansion=True``) — after a ``JobFinish`` or
+  ``NodeRecover`` frees capacity, shrunken jobs are grown back toward
+  their submit-time plan (inverting the shrink ladder, largest step that
+  fits first) with remaining work re-compressed by the worker ratio.
 
 Goodput: each placed job's Table-4 traffic is routed through
 ``core.simulator``'s flow model on the job's reconfigured rail network;
@@ -38,7 +60,7 @@ cost one coordinate relabel instead of a fresh ring synthesis + routing.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Literal, Optional, Set, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Literal, Optional, Set, Tuple
 
 from ..core.availability import JobAllocation
 from ..core.mapping import ParallelismPlan
@@ -52,10 +74,11 @@ from .events import (
     NodeFail,
     NodeRecover,
 )
+from .backlog import TieredBacklog
 from .jobs import JobMapping, JobSpec, plan_job_mapping
 from .metrics import GoodputCache, JobRecord, TimelineMetrics
 from .occupancy import OccupancyIndex
-from .placement import PlacementPolicy, get_policy
+from .placement import PlacementPolicy, gang_scored_fit, get_policy
 from .reconfig import (
     Circuit,
     CircuitMap,
@@ -91,6 +114,9 @@ class ClusterScheduler:
         cost_model: Optional[ReconfigCostModel] = None,
         goodput_model: Literal["flow", "none"] = "flow",
         validate_circuits: bool = True,
+        preemption: bool = False,
+        gang_scoring: bool = False,
+        re_expansion: bool = False,
     ):
         self.cfg = cfg
         self.n = n if n is not None else cfg.nodes_per_side
@@ -103,10 +129,13 @@ class ClusterScheduler:
         self.cost_model = cost_model or ReconfigCostModel()
         self.goodput_model = goodput_model
         self.validate_circuits = validate_circuits
+        self.preemption = preemption
+        self.gang_scoring = gang_scoring
+        self.re_expansion = re_expansion
 
         self.faults: Set[Coord] = set()
         self.running: Dict[int, RunningJob] = {}
-        self.backlog: List[JobSpec] = []
+        self.backlog = TieredBacklog()
         self.circuits: CircuitMap = {}
         self.metrics = TimelineMetrics(grid_nodes=self.n * self.n)
         self._queue = EventQueue()
@@ -123,6 +152,17 @@ class ClusterScheduler:
         # placement attempt; unchanged version => guaranteed re-failure
         self._backlog_seen: Dict[int, int] = {}
         self._segment: Dict[int, int] = {}     # job_id -> run-segment epoch
+        # submit-time spec per job (re-expansion inverts the shrink ladder
+        # back toward this plan)
+        self._orig_spec: Dict[int, JobSpec] = {}
+        # gang mode: circuits still programmed but owned by no job (lazy
+        # teardown); a later install reuses or evicts them per-port
+        self._orphans: Dict[SwitchKey, Set[Circuit]] = {}
+        # programmed-switch counts per row (X groups) / column (Y groups),
+        # maintained at the exact points keys enter/leave self.circuits so
+        # gang scans never walk the whole (monotonically growing) map
+        self._line_rows: Dict[int, int] = {}
+        self._line_cols: Dict[int, int] = {}
         # occupied-node counter maintained at place/evict/finish, with a
         # dirty flag so the per-event metrics sync is O(1) instead of an
         # O(#running-jobs) walk (the walk is kept as
@@ -175,7 +215,14 @@ class ClusterScheduler:
 
     def _install(self, target: CircuitMap) -> Tuple[ReconfigPlan, float]:
         """Patch the global circuit state to include ``target``; returns the
-        plan and its downtime.  Touches only the switch keys in ``target``."""
+        plan and its downtime.  Touches only the switch keys in ``target``.
+
+        In gang mode a switch may hold *orphan* circuits (lazily retained
+        from departed jobs).  Orphans matching the target are reused with
+        zero flips; orphans holding a port the target needs are evicted in
+        the same patch, so per-switch port discipline always holds for the
+        union of live and orphan circuits.
+        """
         patches: List[SwitchPatch] = []
         for key in sorted(target):
             tgt = target[key]
@@ -183,14 +230,38 @@ class ClusterScheduler:
             for c in tgt:
                 refs[c] = refs.get(c, 0) + 1
             cur = self.circuits.get(key, frozenset())
+            remove: FrozenSet[Circuit] = frozenset()
+            orphans = self._orphans.get(key)
+            if orphans:
+                orphans -= tgt                      # reused verbatim: now live
+                out_ports = {pa for pa, _ in tgt}
+                in_ports = {pb for _, pb in tgt}
+                conflict = {
+                    c for c in orphans
+                    if c[0] in out_ports or c[1] in in_ports
+                }
+                if conflict:
+                    orphans -= conflict
+                    remove = frozenset(conflict)
+                    cur = cur - remove
+                if not orphans:
+                    del self._orphans[key]
             add = tgt - cur
-            if add:
-                patches.append(SwitchPatch(key, remove=frozenset(), add=add))
-                self.circuits[key] = cur | add
+            if add or remove:
+                patches.append(SwitchPatch(key, remove=remove, add=add))
+                new = cur | add
+                if new:
+                    if key not in self.circuits:
+                        self._line_add(key)
+                    self.circuits[key] = new
+                else:  # pragma: no cover - remove implies a prior add
+                    if self.circuits.pop(key, None) is not None:
+                        self._line_sub(key)
         plan = ReconfigPlan(tuple(patches))
         return plan, self._account(plan)
 
     def _uninstall(self, target: CircuitMap) -> Tuple[ReconfigPlan, float]:
+        lazy = self.gang_scoring
         patches: List[SwitchPatch] = []
         for key in sorted(target):
             tgt = target[key]
@@ -207,17 +278,58 @@ class ClusterScheduler:
                 del self._switch_refs[key]
             cur = self.circuits.get(key, frozenset())
             remove = cur & frozenset(dead)
-            if remove:
+            if not remove:
+                continue
+            if lazy:
+                # leave the circuits programmed (no mirror strokes now);
+                # track them as orphans for later reuse or eviction
+                self._orphans.setdefault(key, set()).update(remove)
+            else:
                 patches.append(SwitchPatch(key, remove=remove, add=frozenset()))
                 left_circuits = cur - remove
                 if left_circuits:
                     self.circuits[key] = left_circuits
-                else:
-                    self.circuits.pop(key, None)
+                elif self.circuits.pop(key, None) is not None:
+                    self._line_sub(key)
         plan = ReconfigPlan(tuple(patches))
         return plan, self._account(plan)
 
     # -- placement ----------------------------------------------------------
+
+    def _line_add(self, key: SwitchKey) -> None:
+        dim, group, _rail = key
+        w = self._line_rows if dim == "X" else self._line_cols
+        w[group] = w.get(group, 0) + 1
+
+    def _line_sub(self, key: SwitchKey) -> None:
+        dim, group, _rail = key
+        w = self._line_rows if dim == "X" else self._line_cols
+        left = w.get(group, 0) - 1
+        if left > 0:
+            w[group] = left
+        else:
+            w.pop(group, None)
+
+    def _line_weights(self) -> Tuple[Dict[int, int], Dict[int, int]]:
+        """Programmed-switch counts per row (X groups) and column (Y
+        groups) — the gang-affinity signal.  Includes orphans: in gang
+        mode those are exactly the lines where a repeat shape can land
+        for free."""
+        return self._line_rows, self._line_cols
+
+    def _scan_policy(
+        self, occ: OccupancyIndex, jmap: JobMapping
+    ) -> Optional[JobAllocation]:
+        """One policy scan on ``occ`` (the live index or a trial clone) —
+        the single place that decides between the configured policy and
+        gang-affinity scoring, so trial placements (preemption,
+        re-expansion) see exactly what the real placement will do."""
+        if self.gang_scoring:
+            rw, cw = self._line_weights()
+            return gang_scored_fit(
+                self.n, occ, jmap.rows_req, jmap.cols_req, rw, cw
+            )
+        return self.policy(self.n, occ, jmap.rows_req, jmap.cols_req)
 
     def _try_place(
         self, job: JobSpec, t: float, jmap: Optional[JobMapping] = None,
@@ -232,7 +344,7 @@ class ClusterScheduler:
             # — skip the policy scan when no rectangle can possibly exist
             return False
         self.metrics.placement_scans += 1
-        alloc = self.policy(self.n, self._occ, jmap.rows_req, jmap.cols_req)
+        alloc = self._scan_policy(self._occ, jmap)
         if alloc is None:
             return False
         target = self._circuit_cache.target_for(jmap.mapping, alloc)
@@ -266,7 +378,7 @@ class ClusterScheduler:
         placed_any = True
         while placed_any:
             placed_any = False
-            for job in list(self.backlog):
+            for job in self.backlog.jobs():   # tier desc, FIFO within
                 seen = self._backlog_seen.get(job.job_id)
                 if seen is not None and seen == self._occ.version:
                     continue  # free set identical to the last failure
@@ -276,6 +388,162 @@ class ClusterScheduler:
                     placed_any = True
                 else:
                     self._backlog_seen[job.job_id] = self._occ.version
+
+    # -- preemption ---------------------------------------------------------
+
+    def _preemption_cost(self, rj: RunningJob, t: float) -> Tuple:
+        """Deterministic victim ordering: lowest tier first, then least
+        invested (remaining work x footprint — evicting a nearly-idle or
+        tiny job disturbs the least), then job id."""
+        elapsed = max(0.0, t - rj.resumed_t)
+        remaining = max(0.0, rj.remaining_work_s - elapsed * rj.goodput)
+        return (rj.job.tier, remaining * rj.alloc.size, rj.job.job_id)
+
+    def select_victims(
+        self, job: JobSpec, t: float, jmap: Optional[JobMapping] = None
+    ) -> Optional[List[RunningJob]]:
+        """The minimal cheapest-first victim set whose eviction lets
+        ``job`` place, or None if no set of strictly-lower-tier victims
+        suffices.  Pure: probes the policies on a cloned occupancy index,
+        touching no scheduler state.
+
+        Greedy: victims accrue in cost order until the placement scan
+        succeeds, then a backward pass drops every victim whose eviction
+        turned out unnecessary — the result is minimal (dropping any
+        remaining victim makes the job unplaceable), which the property
+        tests assert directly.
+        """
+        jmap = jmap or self._job_mapping(job)
+        if jmap.nodes > self.n * self.n:
+            return None
+        cands = [
+            rj for rj in self.running.values() if rj.job.tier < job.tier
+        ]
+        if not cands:
+            return None
+        cands.sort(key=lambda rj: self._preemption_cost(rj, t))
+        trial = self._occ.clone()
+        chosen: List[RunningJob] = []
+        found = False
+        for rj in cands:
+            trial.release(rj.alloc.rows, rj.alloc.cols)
+            chosen.append(rj)
+            if not trial.can_fit(jmap.rows_req, jmap.cols_req):
+                continue
+            if self._scan_policy(trial, jmap) is not None:
+                found = True
+                break
+        if not found:
+            return None
+        i = len(chosen) - 1
+        while i >= 0 and len(chosen) > 1:
+            trial = self._occ.clone()
+            for j, rj in enumerate(chosen):
+                if j != i:
+                    trial.release(rj.alloc.rows, rj.alloc.cols)
+            if trial.can_fit(jmap.rows_req, jmap.cols_req) and (
+                self._scan_policy(trial, jmap) is not None
+            ):
+                chosen.pop(i)
+            i -= 1
+        return chosen
+
+    def _try_preempt(self, job: JobSpec, t: float) -> bool:
+        """Evict the cheapest strictly-lower-tier victim set and place
+        ``job`` in the hole; victims requeue (checkpointed: remaining
+        work preserved) at the front of their own tiers."""
+        jmap = self._job_mapping(job)
+        victims = self.select_victims(job, t, jmap=jmap)
+        if victims is None:
+            return False
+        for rj in victims:
+            remaining = self._evict(rj, t)
+            rec = self.metrics.records[rj.job.job_id]
+            rec.preemptions += 1
+            self.metrics.preemptions += 1
+            requeued = dataclasses.replace(rj.job, service_s=remaining)
+            self.backlog.push_front(requeued)
+            # eviction changed occupancy, so no watermark: the drain below
+            # may re-place a victim on the leftover free cells immediately
+            self._backlog_seen.pop(rj.job.job_id, None)
+        placed = self._try_place(job, t, jmap=jmap)
+        assert placed, "victim set was verified on the trial index"
+        self._drain_backlog(t)
+        return True
+
+    # -- re-expansion -------------------------------------------------------
+
+    def _expansion_ladder(
+        self, cur: ParallelismPlan, orig: ParallelismPlan
+    ) -> List[ParallelismPlan]:
+        """Plans from one step above ``cur`` up to ``orig``, inverting
+        ``_shrunk_plan``'s ladder in reverse order (shrink halves dp
+        first, then cp — so expansion restores cp first, then dp)."""
+        plans: List[ParallelismPlan] = []
+        p = cur
+        while p.cp < orig.cp:
+            p = dataclasses.replace(p, cp=p.cp * 2)
+            plans.append(p)
+        while p.dp < orig.dp:
+            p = dataclasses.replace(p, dp=p.dp * 2)
+            plans.append(p)
+        return plans
+
+    def _try_expand(self, rj: RunningJob, t: float) -> bool:
+        """Grow one shrunken job back toward its submit-time plan,
+        choosing the largest ladder step that fits (the job's own
+        rectangle counts as free for the trial — expansion may re-place
+        in place or move)."""
+        orig = self._orig_spec.get(rj.job.job_id)
+        if orig is None or rj.job.plan == orig.plan:
+            return False
+        for plan2 in reversed(self._expansion_ladder(rj.job.plan, orig.plan)):
+            grown = dataclasses.replace(rj.job, plan=plan2)
+            jmap = plan_job_mapping(self.cfg, grown)
+            if jmap.nodes > self.n * self.n:
+                continue
+            trial = self._occ.clone()
+            trial.release(rj.alloc.rows, rj.alloc.cols)
+            if not trial.can_fit(jmap.rows_req, jmap.cols_req):
+                continue
+            if self._scan_policy(trial, jmap) is None:
+                continue
+            remaining = self._evict(rj, t)
+            # remaining work was measured at the shrunken worker count;
+            # more workers compress it by the exact inverse of the shrink
+            # stretch, so a shrink -> expand round trip is work-neutral
+            stretch = (rj.job.plan.dp * rj.job.plan.cp) / (plan2.dp * plan2.cp)
+            placed = self._try_place(
+                grown, t, jmap=jmap, remaining_work_s=remaining * stretch
+            )
+            assert placed, "expansion slot was verified on the trial index"
+            self._jmap_cache[rj.job.job_id] = jmap
+            rec = self.metrics.records[rj.job.job_id]
+            rec.expansions += 1
+            rec.job = grown
+            self.metrics.expansions += 1
+            return True
+        return False
+
+    def _maybe_expand(self, t: float) -> None:
+        """Re-expansion sweep after a capacity-freeing event (JobFinish /
+        NodeRecover).  Backlogged jobs were already offered the capacity
+        (the drain runs first); shrunken running jobs then grow into what
+        is left, highest tier first, re-draining after each growth since
+        an expansion that moves frees its old rectangle."""
+        if not self.re_expansion:
+            return
+        progressed = True
+        while progressed:
+            progressed = False
+            for rj in sorted(
+                self.running.values(),
+                key=lambda r: (-r.job.tier, r.job.job_id),
+            ):
+                if self._try_expand(rj, t):
+                    self._drain_backlog(t)
+                    progressed = True
+                    break
 
     # -- failure handling ---------------------------------------------------
 
@@ -292,6 +560,11 @@ class ClusterScheduler:
         """Tear the job off the fabric; returns remaining work seconds."""
         elapsed = max(0.0, t - rj.resumed_t)
         remaining = max(0.0, rj.remaining_work_s - elapsed * rj.goodput)
+        # close out the run segment with the work it actually executed, so
+        # goodput means are work-weighted instead of last-segment-only
+        self.metrics.records[rj.job.job_id].end_segment(
+            rj.goodput, rj.alloc.size, rj.remaining_work_s - remaining
+        )
         self._uninstall(rj.circuits)
         self._occ.release(rj.alloc.rows, rj.alloc.cols)
         self._occupied_count -= rj.alloc.size
@@ -347,7 +620,7 @@ class ClusterScheduler:
         # migrate attempt above already failed at the current occupancy
         # version, so seed the watermark accordingly.
         requeued = dataclasses.replace(job, service_s=remaining)
-        self.backlog.insert(0, requeued)
+        self.backlog.push_front(requeued)
         self._backlog_seen[job.job_id] = self._occ.version
         self._drain_backlog(ev.time)
 
@@ -359,20 +632,26 @@ class ClusterScheduler:
             self.metrics.records.setdefault(
                 job.job_id, JobRecord(job=job, submit_t=ev.time)
             )
+            self._orig_spec.setdefault(job.job_id, job)
             if not self._try_place(job, ev.time):
-                self.backlog.append(job)
+                if self.preemption and self._try_preempt(job, ev.time):
+                    return
+                self.backlog.push(job)
                 self._backlog_seen[job.job_id] = self._occ.version
         elif isinstance(ev, JobFinish):
             rj = self.running.get(ev.job_id)
             if rj is None or ev.epoch != rj.epoch:
                 return  # stale finish from a superseded run segment
+            rec = self.metrics.records[ev.job_id]
+            rec.end_segment(rj.goodput, rj.alloc.size, rj.remaining_work_s)
             self._uninstall(rj.circuits)
             self._occ.release(rj.alloc.rows, rj.alloc.cols)
             self._occupied_count -= rj.alloc.size
             self._occ_dirty = True
             del self.running[ev.job_id]
-            self.metrics.records[ev.job_id].finish_t = ev.time
+            rec.finish_t = ev.time
             self._drain_backlog(ev.time)
+            self._maybe_expand(ev.time)
         elif isinstance(ev, NodeFail):
             self._handle_node_fail(ev)
         elif isinstance(ev, NodeRecover):
@@ -380,6 +659,7 @@ class ClusterScheduler:
             self._occ.recover(ev.node)
             self._occ_dirty = True             # healthy count changed
             self._drain_backlog(ev.time)
+            self._maybe_expand(ev.time)
         else:  # pragma: no cover
             raise TypeError(f"unknown event {ev!r}")
 
@@ -408,6 +688,12 @@ class ClusterScheduler:
             self._dispatch(ev)
             self._sync_occupancy()
             self.metrics.events_processed += 1
+        if until is not None:
+            # charge the tail window [last event, until] to the node-second
+            # integrals — stopping at the horizon used to silently drop it
+            # from util_node_seconds / healthy_node_seconds
+            next_t = self._queue.peek_time()
+            self.metrics.advance(until if next_t is None else min(until, next_t))
         self._sync_cache_stats()
         return self.metrics
 

@@ -17,6 +17,8 @@ materializing the intermediate list.
 
 from __future__ import annotations
 
+import bisect
+import heapq
 import random
 from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
@@ -41,18 +43,40 @@ def iter_poisson_trace(
     archs: Sequence[str] = DEFAULT_MIX,
     mean_service_s: float = 3600.0,
     start_id: int = 0,
+    tier_weights: Optional[Sequence[float]] = None,
 ) -> Iterator[JobSubmit]:
-    """Poisson job arrivals with exponential service demands (lazy)."""
+    """Poisson job arrivals with exponential service demands (lazy).
+
+    ``tier_weights`` optionally assigns each job an SLO tier drawn with
+    the given (unnormalized) weights — index i is tier i, higher tiers
+    are more important.  The draw costs one extra ``rng.random()`` per
+    job, so the default (``None``) produces the byte-identical event
+    sequence the un-tiered generator always produced.
+    """
     rng = random.Random(seed)
     t = 0.0
     jid = start_id
+    cum: Optional[List[float]] = None
+    if tier_weights is not None:
+        total = float(sum(tier_weights))
+        acc = 0.0
+        cum = []
+        for w in tier_weights:
+            acc += w / total
+            cum.append(acc)
     while True:
         t += rng.expovariate(arrival_rate_per_h / 3600.0)
         if t >= duration_s:
             break
         arch = rng.choice(list(archs))
         service = max(60.0, rng.expovariate(1.0 / mean_service_s))
-        yield JobSubmit(time=t, job=make_job(jid, arch, service_s=service))
+        tier = 0
+        if cum is not None:
+            u = rng.random()
+            tier = next(i for i, c in enumerate(cum) if u <= c)
+        yield JobSubmit(
+            time=t, job=make_job(jid, arch, service_s=service, tier=tier)
+        )
         jid += 1
 
 
@@ -71,7 +95,51 @@ def iter_failure_trace(
 ) -> Iterator[Event]:
     """Node failures over an n x n grid (lazy): cluster-level failure
     rate is n^2 / mtbf_node_s; each failure schedules its recovery after
-    an exponential repair time."""
+    an exponential repair time.
+
+    The up-node set is maintained incrementally (sorted node-id list +
+    repair-time heap) instead of rebuilding an O(n^2) candidate list per
+    failure event, which dominated trace generation at 128x128 (16K
+    coords).  The rng draw order and the row-major candidate indexing
+    match :func:`_iter_failure_trace_ref` exactly, so the event sequence
+    is identical (asserted in ``tests/test_policy.py``).
+    """
+    rng = random.Random(seed ^ 0x5DEECE66D)
+    t = 0.0
+    rate = n * n / mtbf_node_s
+    up: List[int] = list(range(n * n))        # node ids r*n + c, sorted
+    repairs: List[Tuple[float, int]] = []     # (repair time, node id) heap
+    while True:
+        t += rng.expovariate(rate)
+        if t >= duration_s:
+            break
+        # nodes whose repair has completed by now are eligible again
+        # (strictly-later repairs stay down, matching the reference's
+        # ``rt > t`` filter)
+        while repairs and repairs[0][0] <= t:
+            _, nid = heapq.heappop(repairs)
+            bisect.insort(up, nid)
+        if not up:
+            continue
+        nid = up.pop(rng.randrange(len(up)))
+        node = (nid // n, nid % n)
+        yield NodeFail(time=t, node=node)
+        repair = t + max(60.0, rng.expovariate(1.0 / mttr_s))
+        heapq.heappush(repairs, (repair, nid))
+        if repair < duration_s:
+            yield NodeRecover(time=repair, node=node)
+
+
+def _iter_failure_trace_ref(
+    *,
+    n: int,
+    seed: int = 0,
+    duration_s: float = 4 * 3600.0,
+    mtbf_node_s: float = 1e7,
+    mttr_s: float = 1800.0,
+) -> Iterator[Event]:
+    """Seed implementation of :func:`iter_failure_trace` rebuilding the
+    candidate list per event — kept as the equivalence-test oracle."""
     rng = random.Random(seed ^ 0x5DEECE66D)
     t = 0.0
     rate = n * n / mtbf_node_s

@@ -30,7 +30,7 @@ from typing import Optional, Sequence, Tuple, Union
 
 import jax
 
-from ..compat import axis_size, shard_map
+from ..compat import axis_size, degraded_partial_auto, shard_map
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -101,7 +101,18 @@ def hierarchical_all_reduce(
 
     Requires ``x.shape[scatter_dim]`` divisible by the intra axes' total
     size.  Phase 2's inter-node traffic is V/|intra| per chip.
+
+    Inside a partial-auto shard_map on jax 0.4.x the scatter/gather
+    phases cannot be lowered (XLA aborts the process — see
+    ``repro.compat``); the schedule then degrades to sequential psums
+    over the two axis groups, which computes the identical sum without
+    the inter-phase byte reduction.
     """
+    if degraded_partial_auto():
+        x = all_reduce_axis(x, intra_axes)
+        if _axes_tuple(inter_axes):
+            x = all_reduce_axis(x, inter_axes)
+        return x
     x = reduce_scatter_axis(x, intra_axes, dim=scatter_dim)   # k x BW domain
     x = all_reduce_axis(x, inter_axes)                        # rails
     x = all_gather_axis(x, intra_axes, dim=scatter_dim)       # k x BW domain

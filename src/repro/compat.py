@@ -6,13 +6,60 @@ in ``jax.experimental.shard_map`` with the older keyword surface
 (``check_rep`` instead of ``check_vma``, ``auto`` instead of
 ``axis_names``).  All shard_map call sites in the repo go through
 :func:`shard_map` below.
+
+Partial-auto regions on 0.4.x additionally cannot lower reduce-scatter /
+tiled all-gather: XLA's SPMD partitioner hard-aborts the process
+(``Check failed: sharding.IsManualSubgroup`` in hlo_sharding_util /
+spmd_partitioner) on ``psum_scatter`` and tiled ``all_gather`` when only
+a subset of the mesh axes is manual, and the ``axis_index``-based
+emulation dies on an unsupported ``PartitionId`` instruction.  Plain
+``psum`` lowers fine.  :func:`shard_map` therefore enters a
+*degraded-collectives* scope while tracing a partial-auto body on old
+jax; schedule code queries :func:`degraded_partial_auto` and falls back
+to psum-based forms that are mathematically identical but forgo the
+bandwidth savings (see ``collectives.schedules.hierarchical_all_reduce``).
 """
 
 from __future__ import annotations
 
+import contextlib
+import threading
 from typing import Any, Callable, Optional
 
 import jax
+
+_tls = threading.local()
+
+
+def supports_partial_auto() -> bool:
+    """Whether partial-auto (partial-manual) shard_map regions compile.
+
+    On jax 0.4.x XLA's SPMD partitioner hard-aborts the *process* on
+    ``lax.scan`` (and on psum_scatter / tiled all_gather) inside a
+    shard_map with a non-empty auto set, so any model body with a layer
+    scan cannot run there at all.  Callers must fall back to a
+    fully-GSPMD formulation (see ``train.train_step.make_train_step``).
+    """
+    return getattr(jax, "shard_map", None) is not None
+
+
+def degraded_partial_auto() -> bool:
+    """True while tracing the body of a partial-auto shard_map on a jax
+    version whose SPMD partitioner cannot lower sub-group collectives
+    (0.4.x).  Collective schedules must then avoid ``psum_scatter`` /
+    tiled ``all_gather`` (XLA aborts the whole process, not an exception)
+    and use plain-psum fallbacks instead."""
+    return bool(getattr(_tls, "degraded_partial_auto", False))
+
+
+@contextlib.contextmanager
+def _degraded_partial_auto_scope():
+    prev = getattr(_tls, "degraded_partial_auto", False)
+    _tls.degraded_partial_auto = True
+    try:
+        yield
+    finally:
+        _tls.degraded_partial_auto = prev
 
 
 def axis_size(axis_name) -> int:
@@ -60,5 +107,15 @@ def shard_map(
     auto = frozenset()
     if axis_names is not None:
         auto = frozenset(mesh.axis_names) - frozenset(axis_names)
-    return old_sm(f, mesh, in_specs=in_specs, out_specs=out_specs,
+    body = f
+    if auto:
+        # partial-auto on 0.4.x: trace the body under the degraded-
+        # collectives scope so schedules avoid the ops XLA cannot lower
+        # (see module docstring); the scope is active exactly while jax
+        # traces the body, which is when the schedule code runs.
+        def body(*args, **kwargs):
+            with _degraded_partial_auto_scope():
+                return f(*args, **kwargs)
+
+    return old_sm(body, mesh, in_specs=in_specs, out_specs=out_specs,
                   check_rep=check_vma, auto=auto)

@@ -75,19 +75,11 @@ def test_hierarchical_reduces_inter_node_bytes():
     assert data["hier"] * 3 < data["flat"], data  # ~4x fewer AR bytes
 
 
-def _old_jax() -> bool:
-    import jax
-
-    return not hasattr(jax.sharding, "AxisType")
-
-
-@pytest.mark.xfail(
-    _old_jax(),
-    reason="ISSUE 1: jax 0.4.x partial-auto shard_map aborts in XLA "
-    "(Check failed: sharding.IsManualSubgroup) for manual_hier dp mode",
-    strict=False,
-)
 def test_train_modes_agree():
+    """Runs un-xfailed on jax 0.4.x too: the partial-auto shard_map body
+    traces under ``repro.compat``'s degraded-collectives scope there, so
+    the hierarchical schedule lowers to plain psums instead of the
+    psum_scatter/all_gather forms whose SPMD partitioning aborts XLA."""
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np, json
         from repro.configs import get_smoke_config

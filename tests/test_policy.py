@@ -1,0 +1,458 @@
+"""ISSUE 4: MLaaS policy engine + timeline-accounting bugfixes.
+
+Covers, per the acceptance criteria:
+
+* **tiered backlog** — single-tier operation is byte-identical to the
+  seed's plain-list FIFO (property test against a list oracle); tiers
+  drain highest-first, FIFO within;
+* **preemption** — victim sets are minimal (dropping any chosen victim
+  makes the high-tier job unplaceable), strictly lower-tier, and with a
+  single tier the feature is a provable no-op (identical timelines);
+* **re-expansion** — a shrink -> re-expand round trip conserves work
+  exactly (the stretch applied at shrink is inverted at expansion), and
+  the feature is a no-op on failure-free traces;
+* **gang scoring** — repeat shapes reuse lazily-retained circuits
+  (fewer mirror strokes and reconfig rounds), and the global circuit
+  state keeps per-switch port discipline, orphans included;
+* **accounting bugfixes** — ``run(until=...)`` integrates the tail
+  window, ``mean_goodput`` is work-weighted over run segments,
+  ``estimate_goodput`` trims column-heavy allocations to the flow-model
+  budget, and the incremental ``iter_failure_trace`` emits the exact
+  reference event sequence.
+"""
+
+import math
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cluster import (
+    ClusterScheduler,
+    JobSubmit,
+    NodeFail,
+    TieredBacklog,
+    estimate_goodput,
+    make_job,
+    plan_job_mapping,
+)
+from repro.cluster.metrics import JobRecord, TimelineMetrics
+from repro.cluster.reconfig import _check_port_discipline
+from repro.cluster.trace import (
+    _iter_failure_trace_ref,
+    iter_failure_trace,
+    iter_poisson_trace,
+)
+from repro.core.availability import JobAllocation
+from repro.core.mapping import MappingResult, ParallelismPlan
+from repro.core.topology import DimensionSpec, RailXConfig
+
+CFG16 = RailXConfig(m=4, n=4, R=32)
+
+# 2x8-node footprint on the 16x16 grid (16 jobs fill it exactly)
+FILLER = ParallelismPlan(tp=8, cp=2, ep=1, dp=4, pp=2)
+# 2x16-node footprint (dp doubled: one elastic shrink returns FILLER's)
+BIG = ParallelismPlan(tp=8, cp=2, ep=1, dp=8, pp=2)
+
+
+def sched16(**kw):
+    kw.setdefault("policy", "best_fit")
+    kw.setdefault("goodput_model", "none")
+    kw.setdefault("validate_circuits", False)
+    return ClusterScheduler(CFG16, n=16, **kw)
+
+
+def timeline(metrics: TimelineMetrics):
+    """Comparable per-job decision record (placement-affecting fields)."""
+    return [
+        (jid, r.submit_t, r.start_t, r.finish_t, r.nodes, r.migrations,
+         r.shrinks, round(r.reconfig_downtime_s, 9))
+        for jid, r in sorted(metrics.records.items())
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Tiered backlog
+# ---------------------------------------------------------------------------
+
+
+def _job(jid: int, tier: int = 0):
+    return make_job(jid, "llama3.2-3b", service_s=100.0, tier=tier)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["push", "push_front", "pop"]),
+                          st.integers(0, 5)), max_size=40))
+def test_tiered_backlog_single_tier_is_fifo_list(ops):
+    """With one tier the backlog is operation-for-operation a plain list
+    (push == append, push_front == insert(0), drain order == list order)."""
+    tb = TieredBacklog()
+    oracle = []
+    next_id = 0
+    for op, idx in ops:
+        if op == "push":
+            j = _job(next_id)
+            next_id += 1
+            tb.push(j)
+            oracle.append(j)
+        elif op == "push_front":
+            j = _job(next_id)
+            next_id += 1
+            tb.push_front(j)
+            oracle.insert(0, j)
+        elif oracle:
+            j = oracle.pop(idx % len(oracle))
+            tb.remove(j)
+        assert tb.jobs() == oracle
+        assert len(tb) == len(oracle)
+        assert bool(tb) == bool(oracle)
+
+
+def test_tiered_backlog_orders_tiers_highest_first():
+    tb = TieredBacklog()
+    j0, j1a, j1b, j2 = _job(0, 0), _job(1, 1), _job(2, 1), _job(3, 2)
+    for j in (j0, j1a, j2, j1b):
+        tb.push(j)
+    assert [j.job_id for j in tb.jobs()] == [3, 1, 2, 0]
+    assert tb.tiers() == [2, 1, 0]
+    front = _job(4, 1)
+    tb.push_front(front)              # front of tier 1, not of the queue
+    assert [j.job_id for j in tb.jobs()] == [3, 4, 1, 2, 0]
+    tb.remove(j2)
+    assert tb.tiers() == [1, 0]
+
+
+# ---------------------------------------------------------------------------
+# Preemption
+# ---------------------------------------------------------------------------
+
+
+def _fill_grid_events(n_jobs=16, tier=0, service=1e5):
+    return [
+        JobSubmit(time=10.0 + i, job=make_job(i, "qwen3-8b", plan=FILLER,
+                                              service_s=service, tier=tier))
+        for i in range(n_jobs)
+    ]
+
+
+def test_preemption_places_high_tier_job_immediately():
+    s = sched16(preemption=True)
+    evs = _fill_grid_events()
+    hi = make_job(99, "qwen3-8b", plan=FILLER, service_s=500.0, tier=2)
+    evs.append(JobSubmit(time=100.0, job=hi))
+    m = s.run(evs, until=200.0)
+    assert m.preemptions >= 1
+    assert m.records[99].queueing_delay == 0.0
+    # victims are checkpoint-evicted: requeued with their remaining work,
+    # strictly less than the submitted demand (they ran ~90 s)
+    victims = [r for r in m.records.values() if r.preemptions]
+    assert victims
+    for r in victims:
+        assert r.job.tier < hi.tier
+    requeued = [j for j in s.backlog.jobs() if j.job_id != 99]
+    assert requeued and all(j.service_s < 1e5 for j in requeued)
+
+
+def test_preemption_never_evicts_equal_or_higher_tier():
+    s = sched16(preemption=True)
+    evs = _fill_grid_events(tier=1)
+    evs.append(JobSubmit(
+        time=100.0, job=make_job(99, "qwen3-8b", plan=FILLER,
+                                 service_s=500.0, tier=1)))
+    m = s.run(evs, until=200.0)
+    assert m.preemptions == 0
+    assert 99 not in s.running
+    assert any(j.job_id == 99 for j in s.backlog.jobs())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_preemption_victim_sets_are_minimal(seed):
+    """For a grid filled with randomized low-tier jobs, the selected
+    victim set is minimal: dropping any one victim leaves no rectangle
+    for the high-tier job."""
+    import random
+
+    rng = random.Random(seed)
+    s = sched16(preemption=True)
+    evs = []
+    plans = [FILLER, BIG,
+             ParallelismPlan(tp=4, cp=1, ep=1, dp=4, pp=2)]   # 1x8
+    for i in range(rng.randrange(8, 20)):
+        evs.append(JobSubmit(
+            time=1.0 + i,
+            job=make_job(i, "qwen3-8b", plan=rng.choice(plans),
+                         service_s=1e5, tier=0)))
+    s.run(evs, until=50.0)
+    hi = make_job(999, "qwen3-8b", plan=BIG, service_s=100.0, tier=1)
+    jmap = plan_job_mapping(CFG16, hi)
+    if s._scan_policy(s._occ, jmap) is not None:
+        return  # fits without preemption; nothing to select
+    victims = s.select_victims(hi, 60.0, jmap=jmap)
+    if victims is None:
+        return  # not placeable even after evicting every tier-0 job
+    assert victims
+    for rj in victims:
+        assert rj.job.tier < hi.tier
+    for drop in range(len(victims)):
+        trial = s._occ.clone()
+        for j, rj in enumerate(victims):
+            if j != drop:
+                trial.release(rj.alloc.rows, rj.alloc.cols)
+        assert s._scan_policy(trial, jmap) is None, (
+            f"victim {victims[drop].job.job_id} was unnecessary"
+        )
+
+
+def test_single_tier_preemption_is_noop():
+    """Acceptance: with every job in the default tier, enabling
+    preemption cannot change any scheduling decision."""
+    evs = list(iter_poisson_trace(seed=11, duration_s=6 * 3600.0,
+                                  arrival_rate_per_h=40.0,
+                                  mean_service_s=1800.0))
+    base = sched16().run(evs)
+    with_preempt = sched16(preemption=True).run(list(evs))
+    assert timeline(base) == timeline(with_preempt)
+    assert with_preempt.preemptions == 0
+
+
+# ---------------------------------------------------------------------------
+# Re-expansion
+# ---------------------------------------------------------------------------
+
+
+def test_shrink_then_expand_round_trip_conserves_work():
+    s = sched16(re_expansion=True)
+    evs = [JobSubmit(time=0.0, job=make_job(0, "qwen3-8b", plan=BIG,
+                                            service_s=30000.0))]
+    for i in range(1, 25):
+        evs.append(JobSubmit(time=1.0 + i * 0.1,
+                             job=make_job(i, "qwen3-8b", plan=FILLER,
+                                          service_s=5000.0)))
+    s.run(evs, until=50.0)
+    rj = s.running[0]
+    full_nodes = rj.alloc.size
+    target = (rj.alloc.rows[0], rj.alloc.cols[0])
+    m = s.run([NodeFail(time=100.0, node=target)])
+    rec = m.records[0]
+    assert rec.shrinks >= 1 and rec.expansions >= 1
+    assert rec.job.plan == BIG            # fully restored
+    assert rec.nodes == full_nodes
+    # work conservation: segments at the full footprint count 1:1, the
+    # shrunken segment's work counts at the worker ratio (1/2)
+    full_work = sum(
+        seg.work_s * (1.0 if seg.nodes == full_nodes else 0.5)
+        for seg in rec.segments
+    )
+    assert math.isclose(full_work, 30000.0, rel_tol=1e-9)
+    # timeline consistency: finish = work actually executed (stretched
+    # segments at half speed) + downtime, all of which advance the clock
+    assert rec.finish_t is not None and rec.finish_t > 30000.0
+
+
+def test_failure_requeue_goes_to_tier_front():
+    """Migrate and shrink both impossible (grid saturated by other jobs,
+    min_nodes pins the victim) -> the victim requeues at the *front* of
+    its tier with its remaining work, exactly like the seed's
+    ``insert(0, ...)``."""
+    s = sched16()
+    evs = _fill_grid_events(n_jobs=15, service=1e5)          # 15 x 2x8
+    pinned = make_job(50, "qwen3-8b", plan=FILLER, service_s=1e5,
+                      min_nodes=16)                          # shrink floor
+    evs.append(JobSubmit(time=30.0, job=pinned))             # fills slot 16
+    queued = make_job(51, "qwen3-8b", plan=FILLER, service_s=1e5)
+    evs.append(JobSubmit(time=40.0, job=queued))             # backlogged
+    s.run(evs, until=50.0)
+    assert 50 in s.running and [j.job_id for j in s.backlog.jobs()] == [51]
+    rect = s.running[50].alloc
+    m = s.run([NodeFail(time=100.0, node=(rect.rows[0], rect.cols[0]))],
+              until=200.0)
+    rec = m.records[50]
+    assert rec.migrations == 0 and rec.shrinks == 0
+    ids = [j.job_id for j in s.backlog.jobs()]
+    assert ids[0] == 50 and 51 in ids
+    requeued = s.backlog.jobs()[0]
+    assert requeued.service_s < 1e5                         # remaining work
+
+
+def test_re_expansion_noop_without_failures():
+    evs = list(iter_poisson_trace(seed=5, duration_s=6 * 3600.0,
+                                  arrival_rate_per_h=40.0,
+                                  mean_service_s=1800.0))
+    base = sched16().run(evs)
+    with_exp = sched16(re_expansion=True).run(list(evs))
+    assert timeline(base) == timeline(with_exp)
+    assert with_exp.expansions == 0
+
+
+# ---------------------------------------------------------------------------
+# Gang scoring (lazy teardown + affinity)
+# ---------------------------------------------------------------------------
+
+
+def _churn(gang: bool):
+    s = ClusterScheduler(CFG16, n=16, policy="best_fit",
+                         goodput_model="none", validate_circuits=True,
+                         gang_scoring=gang)
+    evs = [
+        JobSubmit(time=100.0 * i,
+                  job=make_job(i, "qwen3-8b", plan=FILLER, service_s=150.0))
+        for i in range(30)
+    ]
+    m = s.run(evs)
+    _check_port_discipline(s.cfg, s.circuits)   # orphans keep discipline
+    # incrementally-maintained affinity weights == recount from the map
+    rows, cols = {}, {}
+    for (dim, group, _rail) in s.circuits:
+        w = rows if dim == "X" else cols
+        w[group] = w.get(group, 0) + 1
+    assert (rows, cols) == s._line_weights()
+    return s, m.summary()
+
+
+def test_gang_scoring_cuts_circuit_flips_on_repeat_shapes():
+    _, base = _churn(False)
+    _, gang = _churn(True)
+    assert base["finished"] == gang["finished"] == 30
+    assert gang["circuits_flipped"] < base["circuits_flipped"] / 2
+    assert gang["reconfig_rounds"] < base["reconfig_rounds"]
+
+
+def test_gang_orphans_evicted_on_port_conflict():
+    """A different shape landing on an orphaned rectangle must evict the
+    conflicting orphan circuits in its install patch (port discipline
+    over live + orphan circuits is checked switch by switch)."""
+    s = ClusterScheduler(CFG16, n=16, policy="best_fit",
+                         goodput_model="none", validate_circuits=True,
+                         gang_scoring=True)
+    evs = [JobSubmit(time=0.0, job=make_job(0, "qwen3-8b", plan=FILLER,
+                                            service_s=10.0))]
+    # after job 0 finishes, a job with a different column extent lands on
+    # overlapping switches
+    evs.append(JobSubmit(time=100.0, job=make_job(1, "qwen3-8b", plan=BIG,
+                                                  service_s=10.0)))
+    evs.append(JobSubmit(time=200.0, job=make_job(2, "llama3.2-3b",
+                                                  service_s=10.0)))
+    s.run(evs)
+    _check_port_discipline(s.cfg, s.circuits)
+
+
+# ---------------------------------------------------------------------------
+# Accounting bugfixes (ISSUE 4 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_run_until_advances_timeline_to_horizon():
+    """The window between the last event and ``until`` counts toward the
+    node-second integrals (it used to be silently dropped)."""
+    s = sched16()
+    j = make_job(0, "qwen3-8b", plan=FILLER, service_s=100.0)
+    m = s.run([JobSubmit(time=0.0, job=j)], until=1000.0)
+    nodes = m.records[0].nodes
+    assert nodes > 0
+    # healthy the whole horizon; occupied only while the job ran
+    assert math.isclose(m.healthy_node_seconds, 1000.0 * 16 * 16, rel_tol=1e-9)
+    run_s = m.records[0].finish_t - m.records[0].start_t
+    assert math.isclose(m.util_node_seconds, nodes * run_s, rel_tol=1e-6)
+    # continuing past the horizon must not double-count the tail
+    before = m.healthy_node_seconds
+    s.run([NodeFail(time=2000.0, node=(15, 15))], until=2000.0)
+    assert math.isclose(
+        m.healthy_node_seconds, before + 1000.0 * 16 * 16, rel_tol=1e-9
+    )
+
+
+def test_mean_goodput_is_work_weighted_across_segments():
+    rec = JobRecord(job=make_job(0, "llama3.2-3b"), submit_t=0.0, start_t=0.0)
+    rec.goodput = 0.25                    # final segment's value (the bug
+    rec.end_segment(1.0, 8, 900.0)        # reported only this .25)
+    rec.end_segment(0.25, 4, 100.0)
+    assert math.isclose(rec.weighted_goodput(), (900.0 + 25.0) / 1000.0)
+    assert rec.segment_count == 2
+    m = TimelineMetrics(grid_nodes=256, records={0: rec})
+    assert math.isclose(m.mean_goodput(), rec.weighted_goodput())
+    # a still-running first segment falls back to the placement goodput
+    fresh = JobRecord(job=make_job(1, "llama3.2-3b"), submit_t=0.0,
+                      start_t=0.0, goodput=0.5)
+    assert fresh.weighted_goodput() == 0.5
+
+
+def test_estimate_goodput_trims_column_heavy_allocations():
+    """Wide (X-extent) allocations over the flow budget must trim columns
+    too — the seed only trimmed rows, so a 1 x 600 allocation routed a
+    600-node network despite max_flow_nodes=512."""
+    cfg = RailXConfig(m=4, n=4, R=2048)
+    job = make_job(0, "llama3.2-3b", plan=ParallelismPlan(tp=4, dp=4))
+    mapping = MappingResult(
+        specs=(DimensionSpec(name="dp", scale=4, rails=cfg.r, phys="X"),),
+        est_comm_time=0.0,
+    )
+    wide = JobAllocation(rows=(0,), cols=tuple(range(600)))
+    import repro.cluster.metrics as cm
+
+    seen = {}
+    orig = cm.build_job_network
+
+    def spy(cfg_, mapping_, alloc_):
+        seen["alloc"] = alloc_
+        return orig(cfg_, mapping_, alloc_)
+
+    cm.build_job_network, build = spy, cm.build_job_network
+    try:
+        g = estimate_goodput(cfg, job, mapping, wide, max_flow_nodes=64)
+    finally:
+        cm.build_job_network = build
+    assert 0.0 < g <= 1.0
+    trimmed = seen["alloc"]
+    assert len(trimmed.rows) * len(trimmed.cols) <= 64
+    assert len(trimmed.cols) >= 4          # never below the X split extent
+
+
+def test_estimate_goodput_trim_keeps_x_split_extent():
+    """Even a budget of 1 node cannot trim below the X split's scale."""
+    cfg = RailXConfig(m=4, n=4, R=2048)
+    job = make_job(0, "llama3.2-3b", plan=ParallelismPlan(tp=4, dp=4))
+    mapping = MappingResult(
+        specs=(DimensionSpec(name="dp", scale=8, rails=cfg.r, phys="X"),),
+        est_comm_time=0.0,
+    )
+    wide = JobAllocation(rows=(0, 1), cols=tuple(range(64)))
+    g = estimate_goodput(cfg, job, mapping, wide, max_flow_nodes=1)
+    assert 0.0 < g <= 1.0
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([8, 16, 33]))
+def test_iter_failure_trace_matches_reference(seed, n):
+    kw = dict(n=n, seed=seed, duration_s=2e5, mtbf_node_s=2e5, mttr_s=900.0)
+    assert list(iter_failure_trace(**kw)) == list(_iter_failure_trace_ref(**kw))
+
+
+def test_poisson_tier_weights_only_add_one_draw():
+    """Default (no tiers) sequence is untouched; tiered traces share
+    arrival times with an extra tier draw per job."""
+    base = list(iter_poisson_trace(seed=3, duration_s=3600.0,
+                                   arrival_rate_per_h=30.0))
+    again = list(iter_poisson_trace(seed=3, duration_s=3600.0,
+                                    arrival_rate_per_h=30.0))
+    assert base == again
+    assert all(ev.job.tier == 0 for ev in base)
+    tiered = list(iter_poisson_trace(seed=3, duration_s=3600.0,
+                                     arrival_rate_per_h=30.0,
+                                     tier_weights=(8, 2, 1)))
+    assert {ev.job.tier for ev in tiered} <= {0, 1, 2}
+    assert tiered[0].time == base[0].time  # first arrival predates any draw
+
+
+def test_policy_summary_reports_tiers():
+    s = sched16(preemption=True)
+    evs = _fill_grid_events()
+    evs.append(JobSubmit(time=100.0, job=make_job(
+        99, "qwen3-8b", plan=FILLER, service_s=500.0, tier=2)))
+    m = s.run(evs, until=700.0)
+    ps = m.policy_summary()
+    assert ps["preemptions"] >= 1
+    assert 2 in ps["queue_delay_by_tier"]
+    assert ps["queue_delay_by_tier"][2] == 0.0
+    assert ps["run_segments"] >= 1
+    for k in ("jobs", "finished", "utilization", "mean_goodput"):
+        assert k in m.summary()           # seed summary keys unchanged
