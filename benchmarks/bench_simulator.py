@@ -18,8 +18,11 @@ Tracks the perf trajectory of the vectorized flow engine
   PYTHONPATH=src python benchmarks/bench_simulator.py --with-seed # slow
 
 ``--smoke`` checks engine parity (compiled == seed reference at 256
-chips, symmetry == exact brute force at 400 chips) plus a loose wall
-ceiling, and does NOT rewrite BENCH_simulator.json.  ``--with-seed``
+chips, symmetry == exact brute force at 400 chips), iterates the
+``repro.arch`` registry (flow build + tiny exact sweep per fig14-capable
+architecture, symmetry sweep per compiled-capable one — a registration
+that breaks a capability fails loudly in CI), plus a loose wall ceiling,
+and does NOT rewrite BENCH_simulator.json.  ``--with-seed``
 re-measures the seed engine (minutes at 4,096 chips) instead of using
 the recorded baselines.
 """
@@ -51,34 +54,21 @@ EXACT_GRID = (("railx", 8), ("railx", 16), ("railx", 32), ("torus", 32))
 SYMMETRY_GRID = (("railx", 64), ("railx", 160), ("torus", 160))
 
 
-def _chips(scale, m):
-    return [
-        (X, Y, x, y)
-        for X in range(scale)
-        for Y in range(scale)
-        for x in range(m)
-        for y in range(m)
-    ]
+# short bench keys (the BENCH_simulator.json "topo" column) -> registry name
+TOPO_ARCH = {"railx": "railx-hyperx", "torus": "torus-2d"}
 
 
 def _dict_net(topo, scale, m=2, k=2.0):
-    from repro.core.simulator import (
-        build_railx_hyperx_network,
-        build_torus2d_network,
-    )
+    from repro.arch import get
 
-    build = build_railx_hyperx_network if topo == "railx" else build_torus2d_network
-    return build(scale, m, k), _chips(scale, m)
+    fb = get(TOPO_ARCH[topo]).flow_fig14(scale, m, k, INJ)
+    return fb.net, fb.chips
 
 
 def _canonical_net(topo, scale, m=2, k=2.0):
-    from repro.core.compiled_flow import (
-        build_compiled_railx_hyperx,
-        build_compiled_torus2d,
-    )
+    from repro.arch import get
 
-    build = build_compiled_railx_hyperx if topo == "railx" else build_compiled_torus2d
-    return build(scale, m, k)
+    return get(TOPO_ARCH[topo]).compiled_fig14(scale, m, k)
 
 
 def _seed_sweep(net, chips):
@@ -205,12 +195,35 @@ def smoke() -> None:
             K_full, cn.cap, per_pair, sequential=False
         )
         assert 0 < symmetric_alltoall_throughput(cn, INJ) <= INJ
+    # registry completeness: every architecture declaring a flow (resp.
+    # compiled) capability must build and survive a tiny exact (resp.
+    # symmetry) sweep — a registration that breaks a capability fails here
+    from repro.arch import registry
+
+    flow_archs = compiled_archs = 0
+    for arch in registry.values():
+        if arch.flow_fig14 is not None:
+            fb = arch.flow_fig14(3, 2, 2.0, INJ)
+            assert len(fb.chips) == 3 * 3 * 2 * 2, arch.name
+            thr = alltoall_throughput(fb.net, fb.chips, INJ)
+            assert 0 < thr <= INJ, (arch.name, thr)
+            flow_archs += 1
+        if arch.compiled_fig14 is not None:
+            cn = arch.compiled_fig14(4, 2, 2.0)
+            thr = symmetric_alltoall_throughput(cn, INJ)
+            assert 0 < thr <= INJ, (arch.name, thr)
+            compiled_archs += 1
+    assert flow_archs >= 5, f"fig14-capable archs missing: {flow_archs}"
+    assert compiled_archs >= 2
     wall = time.perf_counter() - t0
     # seed needed 0.185 s for the 256-chip sweep alone; the whole smoke
-    # (that sweep + two brute-force 400-chip sweeps) must stay snappy or
-    # the vectorized engine has regressed
+    # (that sweep + brute-force 400-chip sweeps + the registry pass) must
+    # stay snappy or the vectorized engine has regressed
     assert wall < 20.0, f"simulator smoke took {wall:.1f}s"
-    print(f"smoke ok ({wall:.2f}s)")
+    print(
+        f"smoke ok ({wall:.2f}s; registry: {len(registry)} archs, "
+        f"{flow_archs} flow, {compiled_archs} compiled)"
+    )
 
 
 def main() -> None:

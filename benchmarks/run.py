@@ -61,69 +61,48 @@ def bench_table6() -> None:
 
 
 def bench_fig14a() -> None:
-    """All-to-all throughput at scale 16 (1,024 chips) — the vectorized
-    engine routes the full demand matrix in well under a second, where
-    the seed dict engine needed ~5 s (see BENCH_simulator.json for the
-    trajectory up to 4,096 chips exact / 102,400 chips via symmetry)."""
-    from repro.core.simulator import (
-        alltoall_throughput,
-        build_fattree_network,
-        build_railx_hyperx_network,
-        build_torus2d_network,
-    )
+    """All-to-all throughput at scale 16 (1,024 chips), one curve per
+    architecture in the ``repro.arch`` registry declaring a Fig. 14
+    entry point — registering a new fabric adds its curve here for free.
+    The vectorized engine routes each full demand matrix in well under a
+    second (see BENCH_simulator.json for the trajectory up to 4,096
+    chips exact / 102,400 chips via symmetry)."""
+    from repro.arch import fig14_archs
+    from repro.core.simulator import alltoall_throughput
 
     m, scale, inj = 2, 16, 8.0
+    archs = fig14_archs()
     # warm up the vectorized engine (numpy/scipy imports) off the clock
-    alltoall_throughput(build_railx_hyperx_network(2, m, 2.0), [
-        (X, Y, x, y) for X in range(2) for Y in range(2)
-        for x in range(m) for y in range(m)
-    ], inj)
-    chips = [
-        (X, Y, x, y)
-        for X in range(scale)
-        for Y in range(scale)
-        for x in range(m)
-        for y in range(m)
-    ]
-    nets = {
-        "railx_hyperx": build_railx_hyperx_network(scale, m, 2.0),
-        "torus2d": build_torus2d_network(scale, m, 2.0),
-    }
-    for name, net in nets.items():
+    warm = archs[0].flow_fig14(2, m, 2.0, inj)
+    alltoall_throughput(warm.net, warm.chips, inj)
+    for arch in archs:
+        fb = arch.flow_fig14(scale, m, 2.0, inj)
         t0 = time.perf_counter()
-        thr = alltoall_throughput(net, chips, inj)
+        thr = alltoall_throughput(fb.net, fb.chips, inj)
         us = (time.perf_counter() - t0) * 1e6
-        _row(f"fig14a_{name}", us, f"a2a_flits_per_cycle_chip={thr:.3f}")
-    t0 = time.perf_counter()
-    ft = build_fattree_network(scale * scale * m * m, ports=inj)
-    thr = alltoall_throughput(
-        ft, [("chip", i) for i in range(scale * scale * m * m)], inj
-    )
-    us = (time.perf_counter() - t0) * 1e6
-    _row("fig14a_fattree", us, f"a2a_flits_per_cycle_chip={thr:.3f}")
+        _row(
+            f"fig14a_{arch.fig14_label}", us,
+            f"a2a_flits_per_cycle_chip={thr:.3f}",
+        )
 
 
 def bench_fig14b() -> None:
-    from repro.core.simulator import alltoall_throughput, build_railx_hyperx_network
+    from repro.arch import get
+    from repro.core.simulator import alltoall_throughput
 
     m, scale, inj = 2, 16, 4.0
-    chips = [
-        (X, Y, x, y)
-        for X in range(scale)
-        for Y in range(scale)
-        for x in range(m)
-        for y in range(m)
-    ]
+    railx = get("railx-hyperx")
     for k in (1.0, 2.0, 4.0, 8.0):
+        fb = railx.flow_fig14(scale, m, k, inj)
         t0 = time.perf_counter()
-        thr = alltoall_throughput(
-            build_railx_hyperx_network(scale, m, k), chips, inj
-        )
+        thr = alltoall_throughput(fb.net, fb.chips, inj)
         us = (time.perf_counter() - t0) * 1e6
         _row(f"fig14b_k{int(k)}", us, f"a2a={thr:.3f}")
 
 
 def bench_fig15() -> None:
+    """All-Reduce curves: the per-fabric closed forms are resolved via
+    the ``repro.arch`` registry inside ``paper_fig15_curves``."""
     from repro.core.analytical import paper_fig15_curves
 
     t0 = time.perf_counter()

@@ -100,6 +100,7 @@ def estimate_goodput(
     mapping: MappingResult,
     alloc: JobAllocation,
     max_flow_nodes: int = 512,
+    fabric: str = "railx-hyperx",
 ) -> float:
     """Route the job's Table-4 traffic through the flow model.
 
@@ -107,6 +108,11 @@ def estimate_goodput(
     ``max_flow_nodes`` are evaluated on a trimmed representative
     sub-rectangle (the wiring is translation-symmetric across lines, so
     a single line per physical dimension captures the bottleneck).
+
+    The job-network builder is resolved by ``fabric`` name through the
+    ``repro.arch`` registry (``job_network`` capability); the default
+    ``railx-hyperx`` registration is :func:`build_job_network`, so the
+    default goodput is byte-identical to the pre-registry path.
     """
     vols = job_comm_volumes(job)           # bytes per iteration by dim name
     if alloc.size > max_flow_nodes:
@@ -129,7 +135,11 @@ def estimate_goodput(
             keep_c = max(1, need_x, max_flow_nodes // max(1, keep_r))
             cols = cols[:keep_c]
         alloc = JobAllocation(rows, cols)
-    net = build_job_network(cfg, mapping, alloc)
+    from ..arch import get as _get_arch  # lazy: repro.arch imports cluster
+
+    net = _get_arch(fabric).require("job_network").job_network(
+        cfg, mapping, alloc
+    )
 
     demands: Dict[Tuple[Coord, Coord], float] = {}
 

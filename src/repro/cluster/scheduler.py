@@ -140,6 +140,12 @@ class ClusterScheduler:
         self.metrics = TimelineMetrics(grid_nodes=self.n * self.n)
         self._queue = EventQueue()
         self._jmap_cache: Dict[int, JobMapping] = {}
+        # §5 mapping-solver memo keyed by (arch, plan, shape): the solver
+        # is a pure function of those, so the expansion/shrink ladders'
+        # repeated candidate probes cost a dict hit instead of a re-solve
+        self._solver_cache: Dict[Tuple[object, object, object], JobMapping] = {}
+        self.mapping_solver_hits = 0
+        self.mapping_solver_misses = 0
         self._occ = OccupancyIndex(self.n)
         self._circuit_cache = CircuitShapeCache(cfg, validate=validate_circuits)
         self._goodput_cache = GoodputCache(cfg)
@@ -194,8 +200,22 @@ class ClusterScheduler:
 
     def _job_mapping(self, job: JobSpec) -> JobMapping:
         if job.job_id not in self._jmap_cache:
-            self._jmap_cache[job.job_id] = plan_job_mapping(self.cfg, job)
+            self._jmap_cache[job.job_id] = self._solve_mapping(job)
         return self._jmap_cache[job.job_id]
+
+    def _solve_mapping(self, job: JobSpec) -> JobMapping:
+        """Memoized ``plan_job_mapping``: identical (arch, plan, shape)
+        triples — e.g. every candidate rung of the re-expansion ladder,
+        re-probed after each capacity-freeing event — solve once."""
+        key = (job.arch, job.plan, job.shape)
+        jmap = self._solver_cache.get(key)
+        if jmap is None:
+            self.mapping_solver_misses += 1
+            jmap = plan_job_mapping(self.cfg, job)
+            self._solver_cache[key] = jmap
+        else:
+            self.mapping_solver_hits += 1
+        return jmap
 
     def _sync_cache_stats(self) -> None:
         self.metrics.circuit_cache_hits = self._circuit_cache.hits
@@ -499,7 +519,7 @@ class ClusterScheduler:
             return False
         for plan2 in reversed(self._expansion_ladder(rj.job.plan, orig.plan)):
             grown = dataclasses.replace(rj.job, plan=plan2)
-            jmap = plan_job_mapping(self.cfg, grown)
+            jmap = self._solve_mapping(grown)
             if jmap.nodes > self.n * self.n:
                 continue
             trial = self._occ.clone()
@@ -599,7 +619,7 @@ class ClusterScheduler:
             if plan2 is None:
                 break
             shrunk = dataclasses.replace(job, plan=plan2)
-            jmap = plan_job_mapping(self.cfg, shrunk)
+            jmap = self._solve_mapping(shrunk)
             if jmap.nodes < job.min_nodes:
                 break
             # remaining work was measured with the original worker count:

@@ -73,7 +73,11 @@ def iter_poisson_trace(
         tier = 0
         if cum is not None:
             u = rng.random()
-            tier = next(i for i, c in enumerate(cum) if u <= c)
+            # fall back to the last tier when float accumulation leaves
+            # cum[-1] a few ulps below 1.0 and u lands above it
+            tier = next(
+                (i for i, c in enumerate(cum) if u <= c), len(cum) - 1
+            )
         yield JobSubmit(
             time=t, job=make_job(jid, arch, service_s=service, tier=tier)
         )

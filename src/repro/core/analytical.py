@@ -206,28 +206,40 @@ def paper_fig15_curves(
     "four ports per chip, double for the 1D-ring"), external 100 GB/s/port,
     internal 400 GB/s/port.  We report, for each algorithm, scale p and
     all-reduce size V: time in seconds.
+
+    The per-fabric All-Reduce closed forms are resolved through the
+    ``repro.arch`` registry (``analytical.allreduce_time``): the
+    ``torus_2d`` curve is the ``torus-2d`` architecture's form (Eq. 7)
+    and ``hierarchical`` the ``railx-hyperx`` one (Eq. 8); the 1D-ring
+    curve is fabric-independent (Eq. 6 over all chips, double bandwidth
+    per the paper's note).
     """
+    from ..arch import registry  # lazy: repro.arch imports this module
+
     if k is None:
         k = consts.int_bw_per_port / consts.ext_bw_per_port
     B = consts.ext_bw_per_port * 1e9
     nB = n * B
+    fabric_curves = {
+        "torus_2d": registry["torus-2d"].analytical.allreduce_time,
+        "hierarchical": registry["railx-hyperx"].analytical.allreduce_time,
+    }
     out: Dict[str, Dict[int, Dict[float, float]]] = {
-        "ring_1d": {}, "torus_2d": {}, "hierarchical": {}
+        "ring_1d": {}, **{name: {} for name in fabric_curves}
     }
     for p in scales:
         chips = m * m * p * p
         out["ring_1d"][p] = {}
-        out["torus_2d"][p] = {}
-        out["hierarchical"][p] = {}
+        for name in fabric_curves:
+            out[name][p] = {}
         for V in sizes_bytes:
             # 1D ring over all chips, double bandwidth (paper note)
             out["ring_1d"][p][V] = t_allreduce_ring(
                 chips, V, 2 * nB, consts.alpha_ext
             )
-            out["torus_2d"][p][V] = t_allreduce_2d_ring(
-                m, p, V, nB, consts.alpha_ext
-            )
-            out["hierarchical"][p][V] = t_allreduce_hierarchical(
-                m, p, V, nB, consts.alpha_ext, k, consts.alpha_int
-            )
+            for name, form in fabric_curves.items():
+                out[name][p][V] = form(
+                    m, p, V, nB, consts.alpha_ext,
+                    k=k, alpha_int=consts.alpha_int,
+                )
     return out

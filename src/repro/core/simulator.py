@@ -42,7 +42,6 @@ Execution engines (see ``core.compiled_flow``):
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from collections import defaultdict, deque
 from typing import Callable, Dict, Hashable, Iterable, List, Optional, Sequence, Tuple
 
@@ -75,61 +74,30 @@ class FlowNetwork:
 def build_railx_hyperx_network(
     scale: int, m: int, k_internal: float, links_per_pair: int = 2
 ) -> FlowNetwork:
-    """(scale x scale) RailX-HyperX at chip granularity.
+    """Deprecated alias — the canonical builder is the ``railx-hyperx``
+    registration in ``repro.arch`` (``build_flow``); this returns its
+    ``FlowBuild.net`` unchanged."""
+    from ..arch import get
 
-    Vertices: (X, Y, x, y).  Intra-node mesh links capacity ``k_internal``;
-    each ordered row/column node pair has ``links_per_pair`` unit links,
-    endpoint chips assigned round-robin along the mesh edge (rails live on
-    distinct chip rows/columns — §3.2)."""
-    net = FlowNetwork()
-    for X in range(scale):
-        for Y in range(scale):
-            for x in range(m):
-                for y in range(m):
-                    if x + 1 < m:
-                        net.add_link((X, Y, x, y), (X, Y, x + 1, y), k_internal)
-                    if y + 1 < m:
-                        net.add_link((X, Y, x, y), (X, Y, x, y + 1), k_internal)
-    for Y in range(scale):
-        for a, b in itertools.combinations(range(scale), 2):
-            for l in range(links_per_pair):
-                row = (a + b + l) % m
-                net.add_link((a, Y, row, 0), (b, Y, row, 0), 1.0)
-    for X in range(scale):
-        for a, b in itertools.combinations(range(scale), 2):
-            for l in range(links_per_pair):
-                col = (a + b + l) % m
-                net.add_link((X, a, 0, col), (X, b, 0, col), 1.0)
-    return net
+    return get("railx-hyperx").build_flow(
+        scale, m, k_internal, links_per_pair
+    ).net
 
 
 def build_torus2d_network(side: int, m: int, k_internal: float) -> FlowNetwork:
-    """side x side node 2D-Torus of m x m mesh nodes (for Fig. 14 baselines)."""
-    net = FlowNetwork()
-    for X in range(side):
-        for Y in range(side):
-            for x in range(m):
-                for y in range(m):
-                    if x + 1 < m:
-                        net.add_link((X, Y, x, y), (X, Y, x + 1, y), k_internal)
-                    if y + 1 < m:
-                        net.add_link((X, Y, x, y), (X, Y, x, y + 1), k_internal)
-    for X in range(side):
-        for Y in range(side):
-            for l in range(m):  # one rail per chip row/col = m parallel links
-                net.add_link((X, Y, l, m - 1), ((X + 1) % side, Y, l, 0), 1.0)
-                net.add_link((X, Y, m - 1, l), (X, (Y + 1) % side, 0, l), 1.0)
-    return net
+    """Deprecated alias — the canonical builder is the ``torus-2d``
+    registration in ``repro.arch`` (``build_flow``)."""
+    from ..arch import get
+
+    return get("torus-2d").build_flow(side, m, k_internal).net
 
 
 def build_fattree_network(chips: int, ports: float = 1.0, taper: float = 1.0) -> FlowNetwork:
-    """Idealized non-blocking (or tapered) fat-tree: star through a core
-    vertex with per-chip uplink capacity ports/taper (throughput-equivalent
-    abstraction for flow-level analysis)."""
-    net = FlowNetwork()
-    for c in range(chips):
-        net.add_link(("chip", c), "core", ports / taper)
-    return net
+    """Deprecated alias — the canonical builder is the
+    ``fat-tree-nonblocking`` registration in ``repro.arch``."""
+    from ..arch import get
+
+    return get("fat-tree-nonblocking").build_flow(chips, ports, taper).net
 
 
 # ---------------------------------------------------------------------------

@@ -317,25 +317,21 @@ def bisection_links(g: AdjGraph, axis: int = 0) -> int:
 
 
 def table2_metrics(cfg: RailXConfig) -> Dict[str, Dict[str, float]]:
-    """Closed-form Table 2 rows for this hardware config."""
-    r, R, m, n = cfg.r, cfg.R, cfg.m, cfg.n
-    return {
-        "torus": {
-            "scale": (R / 2) ** 2 * m ** 2,
-            "diameter_ho": R,
-            "bisection_per_chip": 16 * n / (R * m),
-        },
-        "hyperx": {
-            "scale": (r + 1) ** 2 * m ** 2,
-            "diameter_ho": 2,
-            "bisection_per_chip": 2 * n / m,
-        },
-        "dragonfly": {
-            "scale": (r + 1) * (R / 2) * m ** 2,
-            "diameter_ho": 3,
-            "bisection_per_chip": 2 * n / m,
-        },
-    }
+    """Closed-form Table 2 rows for this hardware config, assembled from
+    the ``repro.arch`` registry: every architecture declaring an
+    ``analytical.table2`` entry contributes a row, ordered by the entry's
+    declared position (seed rows: torus, hyperx, dragonfly)."""
+    from ..arch import registry  # lazy: repro.arch imports this module
+
+    entries = sorted(
+        (
+            a.analytical.table2
+            for a in registry.values()
+            if a.analytical is not None and a.analytical.table2 is not None
+        ),
+        key=lambda e: e.order,
+    )
+    return {e.key: e.row(cfg) for e in entries}
 
 
 # ---------------------------------------------------------------------------

@@ -456,3 +456,30 @@ def test_policy_summary_reports_tiers():
     assert ps["run_segments"] >= 1
     for k in ("jobs", "finished", "utilization", "mean_goodput"):
         assert k in m.summary()           # seed summary keys unchanged
+
+
+def test_mapping_solver_memo_is_exact_and_counted():
+    """ISSUE 5 satellite: the §5 mapping solver is memoized by
+    (arch, plan, shape).  The memo must serve results equal to a fresh
+    solve (a stale/mis-keyed entry would silently corrupt placement
+    geometry) and its hit/miss counters must be observable."""
+    import dataclasses
+
+    sched = ClusterScheduler(CFG16, n=16)
+    job = make_job(1, "qwen3-8b")
+    jm1 = sched._solve_mapping(job)
+    assert (sched.mapping_solver_misses, sched.mapping_solver_hits) == (1, 0)
+    # a different job_id with the same (arch, plan, shape) hits the memo
+    jm2 = sched._solve_mapping(make_job(2, "qwen3-8b"))
+    assert (sched.mapping_solver_misses, sched.mapping_solver_hits) == (1, 1)
+    assert jm2 is jm1
+    assert jm2 == plan_job_mapping(CFG16, job)      # == fresh solve
+    # a shrink-ladder candidate (different plan) misses, and still
+    # equals the unmemoized solver
+    shrunk = dataclasses.replace(
+        job, plan=dataclasses.replace(job.plan, dp=job.plan.dp // 2)
+    )
+    jm3 = sched._solve_mapping(shrunk)
+    assert sched.mapping_solver_misses == 2
+    assert jm3 == plan_job_mapping(CFG16, shrunk)
+    assert jm3 != jm1

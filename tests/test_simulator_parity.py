@@ -186,6 +186,48 @@ def test_symmetry_throughput_scaling_railx_vs_torus():
     assert tr < tr8
 
 
+@pytest.mark.parametrize("name,build", CANONICAL, ids=[c[0] for c in CANONICAL])
+def test_presorted_assembly_equals_lexsort_reference(name, build):
+    """ISSUE 5 satellite: the canonical builders assemble their CSR from
+    pre-sorted per-source blocks (no global ``np.lexsort``); the full CSR
+    — indptr, adjacency order, capacities, edge sources — must equal the
+    seed lexsort assembly exactly."""
+    a = build()
+    orig = cf._assemble_csr
+    cf._assemble_csr = cf._assemble_csr_lexsort
+    try:
+        b = build()
+    finally:
+        cf._assemble_csr = orig
+    assert np.array_equal(a.indptr, b.indptr)
+    assert np.array_equal(a.nbr, b.nbr)
+    assert np.array_equal(a.cap, b.cap)
+    assert np.array_equal(a.edge_src, b.edge_src)
+
+
+def test_assemble_csr_rejects_contract_violations():
+    """The presorted assembly must fail loudly on blocks violating its
+    ordering contract instead of silently emitting a non-canonical CSR."""
+    # keys not ascending across blocks for the same source
+    with pytest.raises(AssertionError, match="contract"):
+        cf._assemble_csr(
+            2,
+            [np.array([0, 1]), np.array([0, 1])],
+            [np.array([5, 5]), np.array([3, 3])],   # second block lower key
+            [np.array([1, 0]), np.array([1, 0])],
+            [np.ones(2), np.ones(2)],
+        )
+    # sources not sorted within a block -> slot collision
+    with pytest.raises(AssertionError, match="contract"):
+        cf._assemble_csr(
+            2,
+            [np.array([1, 0, 1])],
+            [np.array([0, 0, 1])],
+            [np.array([0, 1, 0])],
+            [np.ones(3)],
+        )
+
+
 def test_validate_symmetry_rejects_broken_order():
     """The slot-preservation validator must catch a non-canonical
     adjacency ordering (here: one vertex's slots swapped by hand)."""
