@@ -197,19 +197,13 @@ def policy_sweep(side: int = 16, duration_h: float = 24.0, seed: int = 1234):
 
 
 def check_policy_sweep(rows) -> None:
-    """Invariants the sweep must show (CI smoke + full run)."""
-    by = {r["config"]: r for r in rows}
-    fifo, pre = by["fifo"], by["tiered_preempt"]
-    gang, exp = by["tiered_preempt_gang"], by["tiered_preempt_gang_expand"]
-    top = max(int(t) for t in fifo["queue_delay_by_tier_s"])
-    assert pre["preemptions"] > 0, "preemption never triggered"
-    assert (
-        pre["queue_delay_by_tier_s"][top] < fifo["queue_delay_by_tier_s"][top]
-    ), "preemption failed to cut the top tier's queueing delay"
-    assert gang["circuits_flipped"] < pre["circuits_flipped"], (
-        "gang scoring failed to cut circuit flips"
-    )
-    assert exp["expansions"] > 0, "re-expansion never triggered"
+    """Invariants the sweep must show (CI smoke + full run).  The
+    predicates live in ``benchmarks/checks.py`` (``POLICY_SWEEP_CHECKS``)
+    so the check table and this entry point share one source of truth."""
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import checks  # local import: checks.py imports this module at top
+
+    checks.check_policy_sweep(rows)
 
 
 def bench(sides) -> list:
@@ -234,8 +228,26 @@ def main() -> None:
         "--smoke", action="store_true",
         help="quick 16x16 sanity run for CI; does not write BENCH_cluster.json",
     )
+    ap.add_argument(
+        "--trace", metavar="OUT.json", default=None,
+        help="record a Chrome trace-event JSON of the whole bench "
+             "(open in https://ui.perfetto.dev)",
+    )
     args = ap.parse_args()
 
+    if args.trace:
+        from repro.obs import Tracer, tracing
+
+        tracer = Tracer(process="bench-cluster")
+        with tracing(tracer):
+            _run(args)
+        tracer.write(args.trace)
+        print(f"wrote trace {args.trace}")
+    else:
+        _run(args)
+
+
+def _run(args) -> None:
     if args.smoke:
         rows = bench(SMOKE_SIDES)
         for row in rows:

@@ -236,8 +236,26 @@ def main() -> None:
         "--with-seed", action="store_true",
         help="re-measure the seed dict engine instead of recorded baselines",
     )
+    ap.add_argument(
+        "--trace", metavar="OUT.json", default=None,
+        help="record a Chrome trace-event JSON of the whole bench "
+             "(open in https://ui.perfetto.dev)",
+    )
     args = ap.parse_args()
 
+    if args.trace:
+        from repro.obs import Tracer, tracing
+
+        tracer = Tracer(process="bench-simulator")
+        with tracing(tracer):
+            _run(args)
+        tracer.write(args.trace)
+        print(f"wrote trace {args.trace}")
+    else:
+        _run(args)
+
+
+def _run(args) -> None:
     if args.smoke:
         smoke()
         return

@@ -1,0 +1,475 @@
+"""Declarative fidelity + perf-band check table (ReFrame-style).
+
+Each :class:`Check` row names one replayable measurement, the *fidelity*
+values it must reproduce **byte-identically** (simulation outputs are
+deterministic — any drift is a correctness regression, not noise), the
+*sanity* predicates it must satisfy, a wall-clock *band* it must stay
+inside (over 30% + a small absolute slack above the recorded reference,
+best-of-N re-measured to reject load spikes, fails), and the trace spans
+its instrumentation must emit.  Every check runs with tracing enabled
+(``repro.obs``): the emitted trace is schema-validated, required spans
+are asserted present, and per-phase wall-times are reported from
+``Tracer.phase_totals()`` — so one run enforces fidelity, performance
+*and* observability at once.
+
+Two tables:
+
+* ``--smoke`` (CI) — 16x16 cluster replays, small simulator sweeps and
+  the policy sweep, against constants recorded in this file.  Runs in
+  well under a minute.
+* full (default) — replays every row of ``BENCH_cluster.json`` and
+  ``BENCH_simulator.json`` against the recorded matrices themselves.
+
+``POLICY_SWEEP_CHECKS`` is the single source of truth for the policy
+sweep's effect invariants; ``bench_cluster.check_policy_sweep`` delegates
+here.
+
+  PYTHONPATH=src python benchmarks/checks.py --smoke [--trace out.json]
+  PYTHONPATH=src python benchmarks/checks.py                      # full
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import bench_cluster
+import bench_simulator
+
+BENCH_CLUSTER = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_cluster.json"
+)
+BENCH_SIMULATOR = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_simulator.json"
+)
+
+# perf band: fail when measured wall exceeds the reference by this factor
+PERF_TOL = 0.30
+# absolute slack added to every band: sub-second references are dominated
+# by allocator / page-cache noise on a shared machine, and a purely
+# multiplicative band turns an 18 ms check into a coin flip
+PERF_ABS_SLACK_S = 0.1
+# a measurement over band is re-taken (untraced) this many times before
+# being declared a regression; a transient load spike fails one trial, a
+# real regression fails all of them
+PERF_RETRIES = 2
+
+
+# ---------------------------------------------------------------------------
+# Policy-sweep effect invariants (single source of truth; bench_cluster's
+# --smoke assertions delegate here)
+# ---------------------------------------------------------------------------
+
+
+def _top_tier_delay(row: Mapping) -> float:
+    """Top tier's queueing delay; tier keys may be ints (in-process) or
+    strings (after a JSON round trip)."""
+    d = row["queue_delay_by_tier_s"]
+    top = max(int(t) for t in d)
+    return d[top] if top in d else d[str(top)]
+
+
+POLICY_SWEEP_CHECKS: Tuple[Tuple[str, Callable[[Dict[str, Mapping]], bool]], ...] = (
+    (
+        "preemption triggered",
+        lambda by: by["tiered_preempt"]["preemptions"] > 0,
+    ),
+    (
+        "preemption cut the top tier's queueing delay",
+        lambda by: _top_tier_delay(by["tiered_preempt"])
+        < _top_tier_delay(by["fifo"]),
+    ),
+    (
+        "gang scoring cut circuit flips",
+        lambda by: by["tiered_preempt_gang"]["circuits_flipped"]
+        < by["tiered_preempt"]["circuits_flipped"],
+    ),
+    (
+        "re-expansion triggered",
+        lambda by: by["tiered_preempt_gang_expand"]["expansions"] > 0,
+    ),
+)
+
+
+def check_policy_sweep(rows: Sequence[Mapping]) -> None:
+    """Assert every policy-sweep effect invariant over a rows list."""
+    by = {r["config"]: r for r in rows}
+    for desc, pred in POLICY_SWEEP_CHECKS:
+        assert pred(by), f"policy sweep invariant failed: {desc}"
+
+
+# ---------------------------------------------------------------------------
+# The check table
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Check:
+    """One replayable measurement plus everything it must satisfy.
+
+    The runner executes ``run`` twice: once with tracing disabled (the
+    perf measurement — the same conditions the BENCH matrices record
+    under) and once under the ambient tracer (span + schema validation).
+    Both passes must produce identical fidelity values — the harness's
+    end-to-end proof that instrumentation is pure observation.
+    """
+
+    name: str
+    run: Callable[[], Mapping]           # produces the measured row
+    fidelity: Mapping[str, object] = dataclasses.field(default_factory=dict)
+    sanity: Tuple[Tuple[str, Callable[[Mapping], bool]], ...] = ()
+    ref_wall_s: Optional[float] = None   # perf ref (band = *(1+TOL) + slack)
+    wall_key: str = "wall_s"
+    trace_spans: Tuple[str, ...] = ()    # spans this check must emit
+    # keys compared between the traced and untraced pass (defaults to the
+    # fidelity keys; lets predicate-only checks still pin determinism)
+    compare_keys: Optional[Tuple[str, ...]] = None
+
+
+# fidelity keys of a run_grid row: everything deterministic (not wall)
+_GRID_FIDELITY = (
+    "events", "jobs", "finished", "utilization", "mean_goodput",
+    "reconfig_rounds", "circuits_flipped", "placement_attempts",
+    "placement_scans", "circuit_cache_hits", "circuit_cache_misses",
+    "goodput_cache_hits", "goodput_cache_misses",
+)
+
+_GRID_SANITY = (
+    ("processed events", lambda r: r["events"] > 0),
+    ("finished jobs", lambda r: r["finished"] > 0),
+    ("reconfigured circuits", lambda r: r["reconfig_rounds"] > 0),
+    ("goodput in (0, 1]", lambda r: 0.0 < r["mean_goodput"] <= 1.0),
+)
+
+_GRID_SPANS = (
+    "event.JobSubmit", "event.JobFinish",
+    "placement.attempt", "ocs.apply", "ocs.revert",
+)
+
+
+def _grid_check(side: int, full: bool, reference: Mapping) -> Check:
+    mode = "full" if full else "loop"
+    spans = _GRID_SPANS + (
+        ("goodput.estimate", "flow.bfs", "flow.route") if full else ()
+    )
+    return Check(
+        name=f"cluster/{side}x{side}/{mode}",
+        run=lambda: bench_cluster.run_grid(side, full),
+        fidelity={k: reference[k] for k in _GRID_FIDELITY},
+        sanity=_GRID_SANITY,
+        ref_wall_s=float(reference["wall_s"]),
+        trace_spans=spans,
+    )
+
+
+def _exact_check(topo: str, scale: int, reference: Mapping) -> Check:
+    def run() -> Mapping:
+        import time
+
+        from repro.core.simulator import alltoall_throughput
+
+        net, chips = bench_simulator._dict_net(topo, scale)
+        t0 = time.perf_counter()
+        thr = alltoall_throughput(net, chips, bench_simulator.INJ)
+        return {
+            "a2a_flits_per_cycle_chip": thr,
+            "chips": len(chips),
+            "wall_s": time.perf_counter() - t0,
+        }
+
+    return Check(
+        name=f"simulator/exact/{topo}/{scale}",
+        run=run,
+        fidelity={
+            "a2a_flits_per_cycle_chip": reference["a2a_flits_per_cycle_chip"],
+            "chips": reference["chips"],
+        },
+        sanity=(
+            ("throughput in (0, INJ]",
+             lambda r: 0 < r["a2a_flits_per_cycle_chip"] <= bench_simulator.INJ),
+        ),
+        ref_wall_s=float(reference["wall_s"]),
+        trace_spans=("flow.alltoall_counts",),
+    )
+
+
+def _symmetry_check(topo: str, scale: int, reference: Mapping) -> Check:
+    def run() -> Mapping:
+        import time
+
+        from repro.core.compiled_flow import symmetric_alltoall_throughput
+
+        cn = bench_simulator._canonical_net(topo, scale)
+        t0 = time.perf_counter()
+        thr = symmetric_alltoall_throughput(cn, bench_simulator.INJ)
+        return {
+            "a2a_flits_per_cycle_chip": thr,
+            "chips": cn.num_vertices,
+            "wall_s": time.perf_counter() - t0,
+        }
+
+    return Check(
+        name=f"simulator/symmetry/{topo}/{scale}",
+        run=run,
+        fidelity={
+            "a2a_flits_per_cycle_chip": reference["a2a_flits_per_cycle_chip"],
+            "chips": reference["chips"],
+        },
+        sanity=(
+            ("throughput in (0, INJ]",
+             lambda r: 0 < r["a2a_flits_per_cycle_chip"] <= bench_simulator.INJ),
+        ),
+        ref_wall_s=float(reference["wall_s"]),
+        trace_spans=(
+            "flow.csr_assemble", "flow.bfs",
+            "flow.symmetry_sweep", "flow.orbit_gather",
+        ),
+    )
+
+
+def _policy_check(duration_h: float, ref_wall_s: Optional[float]) -> Check:
+    def run() -> Mapping:
+        rows = bench_cluster.policy_sweep(side=16, duration_h=duration_h)
+        by = {r["config"]: r for r in rows}
+        return {
+            "_rows": rows,
+            "wall_s": sum(r["wall_s"] for r in rows),
+            "preemptions": by["tiered_preempt"]["preemptions"],
+            "expansions": by["tiered_preempt_gang_expand"]["expansions"],
+        }
+
+    return Check(
+        name=f"cluster/policy_sweep/16x16/{duration_h:g}h",
+        run=run,
+        sanity=tuple(
+            (desc, (lambda pred: lambda r: pred(
+                {row["config"]: row for row in r["_rows"]}
+            ))(pred))
+            for desc, pred in POLICY_SWEEP_CHECKS
+        ),
+        ref_wall_s=ref_wall_s,
+        trace_spans=_GRID_SPANS + ("preempt.select", "backlog.drain"),
+        compare_keys=("preemptions", "expansions"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Smoke references, recorded in this container (regenerate by running the
+# check's ``run`` and pasting the fidelity values + a representative wall)
+# ---------------------------------------------------------------------------
+
+SMOKE_GRID_16_LOOP = {
+    "events": 640, "jobs": 304, "finished": 304, "utilization": 0.8113,
+    "mean_goodput": 1.0, "reconfig_rounds": 624, "circuits_flipped": 416512,
+    "placement_attempts": 18604, "placement_scans": 397,
+    "circuit_cache_hits": 305, "circuit_cache_misses": 7,
+    "goodput_cache_hits": 0, "goodput_cache_misses": 0,
+    "wall_s": 0.71,
+}
+
+SMOKE_GRID_16_FULL = {
+    "events": 643, "jobs": 304, "finished": 304, "utilization": 0.8436,
+    "mean_goodput": 0.8397, "reconfig_rounds": 630,
+    "circuits_flipped": 415872, "placement_attempts": 25243,
+    "placement_scans": 1266, "circuit_cache_hits": 307,
+    "circuit_cache_misses": 8, "goodput_cache_hits": 307,
+    "goodput_cache_misses": 8,
+    "wall_s": 0.71,
+}
+
+SMOKE_EXACT_RAILX_8 = {
+    # matches bench_simulator.SEED_BASELINES[("railx", 8)] bit for bit
+    "a2a_flits_per_cycle_chip": float(
+        bench_simulator.SEED_BASELINES[("railx", 8)]["thr"]
+    ),
+    "chips": 256,
+    "wall_s": 0.5,
+}
+
+SMOKE_SYMMETRY = {
+    ("railx", 8): {
+        "a2a_flits_per_cycle_chip": 1.1333333333333333,
+        "chips": 256, "wall_s": 0.25,
+    },
+    ("torus", 8): {
+        "a2a_flits_per_cycle_chip": 0.498046875,
+        "chips": 256, "wall_s": 0.25,
+    },
+}
+
+
+def smoke_table() -> Tuple[Check, ...]:
+    return (
+        _grid_check(16, False, SMOKE_GRID_16_LOOP),
+        _grid_check(16, True, SMOKE_GRID_16_FULL),
+        _exact_check("railx", 8, SMOKE_EXACT_RAILX_8),
+        _symmetry_check("railx", 8, SMOKE_SYMMETRY[("railx", 8)]),
+        _symmetry_check("torus", 8, SMOKE_SYMMETRY[("torus", 8)]),
+        _policy_check(duration_h=8.0, ref_wall_s=None),
+    )
+
+
+def full_table() -> Tuple[Check, ...]:
+    """One check per recorded BENCH row, reference = the row itself."""
+    checks = []
+    with open(BENCH_CLUSTER) as f:
+        bc = json.load(f)
+    for row in bc["rows"]:
+        side = int(row["grid"].split("x")[0])
+        checks.append(_grid_check(side, row["mode"] == "full", row))
+    sweep = bc.get("policy_sweep", {})
+    if sweep.get("rows"):
+        checks.append(_policy_check(
+            duration_h=24.0,
+            ref_wall_s=sum(r["wall_s"] for r in sweep["rows"]),
+        ))
+    with open(BENCH_SIMULATOR) as f:
+        bs = json.load(f)
+    for row in bs["rows"]:
+        if row["mode"] == "exact":
+            checks.append(_exact_check(row["topo"], row["scale"], row))
+        else:
+            checks.append(_symmetry_check(row["topo"], row["scale"], row))
+    return tuple(checks)
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+
+def run_check(check: Check, tracer) -> Tuple[Mapping, list]:
+    """Execute one check; returns (untraced row, failure strings).
+
+    Pass 1 runs with tracing force-disabled — that is the perf
+    measurement, under the same conditions the BENCH references were
+    recorded.  Pass 2 runs under ``tracer`` (already ambient) and must
+    reproduce the same fidelity values byte for byte while emitting the
+    required spans.
+    """
+    from repro.obs import NULL_TRACER, tracing
+
+    phase_before = {
+        name: tot["count"] for name, tot in tracer.phase_totals().items()
+    }
+    with tracing(NULL_TRACER):
+        row = check.run()                # untraced: the timed measurement
+    traced_row = check.run()             # traced: spans + determinism
+    failures = []
+    for key, want in check.fidelity.items():
+        got = row.get(key)
+        if got != want:
+            failures.append(
+                f"fidelity drift on {key!r}: got {got!r}, want {want!r}"
+            )
+    for key in (
+        check.compare_keys if check.compare_keys is not None
+        else tuple(check.fidelity)
+    ):
+        if traced_row.get(key) != row.get(key):
+            failures.append(
+                f"tracing changed {key!r}: traced {traced_row.get(key)!r}"
+                f" != untraced {row.get(key)!r}"
+            )
+    for desc, pred in check.sanity:
+        try:
+            ok = pred(row)
+        except Exception as e:  # a predicate crash is a failure, not an abort
+            ok, desc = False, f"{desc} (predicate raised {e!r})"
+        if not ok:
+            failures.append(f"sanity failed: {desc}")
+    if check.ref_wall_s is not None:
+        wall = float(row[check.wall_key])
+        ceiling = check.ref_wall_s * (1.0 + PERF_TOL) + PERF_ABS_SLACK_S
+        trials = 1
+        while wall > ceiling and trials <= PERF_RETRIES:
+            with tracing(NULL_TRACER):
+                rerun = check.run()
+            wall = min(wall, float(rerun[check.wall_key]))
+            trials += 1
+        if wall > ceiling:
+            failures.append(
+                f"perf regression: best {check.wall_key}={wall:.4f}s over "
+                f"{trials} trial(s) exceeds band {check.ref_wall_s:.4f}s "
+                f"* {1 + PERF_TOL:.2f} + {PERF_ABS_SLACK_S:g}s "
+                f"= {ceiling:.4f}s"
+            )
+    phase_after = tracer.phase_totals()
+    for span in check.trace_spans:
+        grew = (
+            span in phase_after
+            and phase_after[span]["count"] > phase_before.get(span, 0)
+        )
+        if not grew:
+            failures.append(f"trace missing span {span!r}")
+    return row, failures
+
+
+def run_table(
+    checks: Sequence[Check], trace_out: Optional[str] = None
+) -> int:
+    from repro.obs import Tracer, tracing, validate_trace
+
+    tracer = Tracer(process="bench-checks")
+    failed = 0
+    with tracing(tracer):
+        for check in checks:
+            with tracer.span("check." + check.name, cat="check"):
+                row, failures = run_check(check, tracer)
+            wall = row.get(check.wall_key)
+            wall_txt = f"{float(wall):.3f}s" if wall is not None else "-"
+            if failures:
+                failed += 1
+                print(f"FAIL {check.name} ({wall_txt})")
+                for msg in failures:
+                    print(f"     {msg}")
+            else:
+                print(f"ok   {check.name} ({wall_txt})")
+    stats = validate_trace(tracer.to_dict())
+    print(
+        f"trace: {stats['events']} events, {stats['spans']} spans "
+        f"(schema valid)"
+    )
+    phases = tracer.phase_totals()
+    width = max(len(n) for n in phases)
+    print("per-phase wall time:")
+    for name, tot in sorted(
+        phases.items(), key=lambda kv: -kv[1]["total_s"]
+    ):
+        print(
+            f"  {name:<{width}}  n={tot['count']:>6}  "
+            f"total={tot['total_s']:.3f}s  mean={tot['mean_us']:.1f}us"
+        )
+    if trace_out:
+        tracer.write(trace_out)
+        print(f"wrote {trace_out}")
+    print(f"{len(checks) - failed}/{len(checks)} checks passed")
+    return failed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI table: 16x16 replays + small sweeps vs recorded constants",
+    )
+    ap.add_argument(
+        "--trace", metavar="OUT.json", default=None,
+        help="write the combined Chrome trace-event JSON here",
+    )
+    args = ap.parse_args()
+    table = smoke_table() if args.smoke else full_table()
+    failed = run_table(table, trace_out=args.trace)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

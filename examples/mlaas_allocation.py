@@ -15,7 +15,14 @@ steers repeat shapes onto their old rectangles so the OCS reuses the
 still-programmed circuits (near-zero mirror strokes).
 
   PYTHONPATH=src python examples/mlaas_allocation.py
+  PYTHONPATH=src python examples/mlaas_allocation.py --trace out.json
+
+``--trace`` records both acts as Chrome trace-event JSON — open it in
+https://ui.perfetto.dev to see every scheduler event, placement attempt,
+OCS patch and flow-engine phase as nested slices.
 """
+
+import argparse
 
 from repro.cluster import ClusterScheduler, JobSubmit, NodeFail, NodeRecover, make_job
 from repro.core.availability import max_single_allocation
@@ -148,5 +155,22 @@ def policy_demo():
 
 
 if __name__ == "__main__":
-    main()
-    policy_demo()
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--trace", metavar="OUT.json", default=None,
+        help="record a Chrome trace-event JSON of both acts "
+             "(open in https://ui.perfetto.dev)",
+    )
+    args = ap.parse_args()
+    if args.trace:
+        from repro.obs import Tracer, tracing
+
+        tracer = Tracer(process="mlaas-allocation")
+        with tracing(tracer):
+            main()
+            policy_demo()
+        tracer.write(args.trace)
+        print(f"\nwrote trace {args.trace}")
+    else:
+        main()
+        policy_demo()

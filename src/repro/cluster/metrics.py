@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from ..core.availability import JobAllocation
 from ..core.compiled_flow import (
@@ -208,13 +208,28 @@ class GoodputCache:
     utilization — hence the goodput scalar — is therefore bit-identical
     for any two same-shape allocations of the same job signature, and one
     routing per (arch, plan, shape, rows, cols) key suffices.
+
+    Hit/miss statistics live in a ``repro.obs`` metrics registry under
+    ``goodput_cache.hits`` / ``goodput_cache.misses``; the ``hits`` /
+    ``misses`` attributes remain as properties over those counters.
     """
 
-    def __init__(self, cfg: RailXConfig):
+    def __init__(self, cfg: RailXConfig, registry=None):
+        from ..obs import MetricsRegistry  # local: keep cluster importable alone
+
         self.cfg = cfg
         self._cache: Dict[Tuple[object, ...], float] = {}
-        self.hits = 0
-        self.misses = 0
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._hits = self.registry.counter("goodput_cache.hits")
+        self._misses = self.registry.counter("goodput_cache.misses")
+
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
 
     def goodput_for(
         self, job: JobSpec, mapping: MappingResult, alloc: JobAllocation
@@ -225,11 +240,11 @@ class GoodputCache:
         )
         g = self._cache.get(key)
         if g is None:
-            self.misses += 1
+            self._misses.inc()
             g = estimate_goodput(self.cfg, job, mapping, alloc)
             self._cache[key] = g
         else:
-            self.hits += 1
+            self._hits.inc()
         return g
 
 
@@ -314,6 +329,17 @@ class TimelineMetrics:
     _last_t: float = 0.0
     _occupied: int = 0
     _healthy: int = 0
+    # scheduler-installed callback pulling live cache/solver counters into
+    # the fields above; called by summary()/policy_summary() so a mid-run
+    # (or post-exception) read reports current values instead of the
+    # zeros the end-of-run()-only sync used to leave behind
+    _sync_hook: Optional[Callable[[], None]] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    def _sync_external(self) -> None:
+        if self._sync_hook is not None:
+            self._sync_hook()
 
     def advance(self, t: float) -> None:
         dt = t - self._last_t
@@ -354,6 +380,7 @@ class TimelineMetrics:
     def policy_summary(self) -> Dict[str, object]:
         """Policy-engine figures (separate from :meth:`summary` so the
         default-trace summary keys stay exactly the seed set)."""
+        self._sync_external()
         tiers = sorted({r.job.tier for r in self.records.values()})
         return {
             "preemptions": self.preemptions,
@@ -372,6 +399,7 @@ class TimelineMetrics:
         }
 
     def summary(self) -> Dict[str, float]:
+        self._sync_external()
         finished = sum(1 for r in self.records.values() if r.finish_t is not None)
         return {
             "jobs": len(self.records),

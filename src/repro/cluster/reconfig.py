@@ -294,27 +294,42 @@ class CircuitShapeCache:
     validation from scratch on every placement; both are isomorphic under
     coordinate relabeling, so one canonical synthesis per shape suffices
     and a hit costs only the O(|circuits|) relabel.
+
+    Hit/miss statistics live in a ``repro.obs`` metrics registry under
+    ``circuit_cache.hits`` / ``circuit_cache.misses``; the ``hits`` /
+    ``misses`` attributes remain as properties over those counters.
     """
 
-    def __init__(self, cfg: RailXConfig, validate: bool = False):
+    def __init__(self, cfg: RailXConfig, validate: bool = False, registry=None):
+        from ..obs import MetricsRegistry  # local: keep cluster importable alone
+
         self.cfg = cfg
         self.validate = validate
         self._cache: Dict[Tuple[object, int, int], CircuitMap] = {}
-        self.hits = 0
-        self.misses = 0
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._hits = self.registry.counter("circuit_cache.hits")
+        self._misses = self.registry.counter("circuit_cache.misses")
+
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
 
     def target_for(self, mapping: MappingResult, alloc: JobAllocation) -> CircuitMap:
         key = (mapping, len(alloc.rows), len(alloc.cols))
         canon = self._cache.get(key)
         if canon is None:
-            self.misses += 1
+            self._misses.inc()
             calloc = canonical_allocation(alloc)
             canon = job_target_circuits(self.cfg, mapping, calloc)
             if self.validate:
                 validate_job_reconfig(self.cfg, mapping, calloc, canon)
             self._cache[key] = canon
         else:
-            self.hits += 1
+            self._hits.inc()
         return relabel_circuits(canon, alloc.rows, alloc.cols)
 
 

@@ -65,6 +65,7 @@ from typing import Dict, FrozenSet, Iterable, List, Literal, Optional, Set, Tupl
 from ..core.availability import JobAllocation
 from ..core.mapping import ParallelismPlan
 from ..core.topology import RailXConfig
+from ..obs import MetricsRegistry, get_tracer
 from .events import (
     Coord,
     Event,
@@ -103,6 +104,19 @@ class RunningJob:
     epoch: int = 0                # run-segment counter (JobFinish matching)
 
 
+def _event_trace_args(ev: Event) -> Dict[str, object]:
+    """Trace-span args for one scheduler event (traced path only)."""
+    args: Dict[str, object] = {"sim_t": ev.time}
+    if isinstance(ev, JobSubmit):
+        args["job"] = ev.job.job_id
+    elif isinstance(ev, JobFinish):
+        args["job"] = ev.job_id
+        args["epoch"] = ev.epoch
+    elif isinstance(ev, (NodeFail, NodeRecover)):
+        args["node"] = list(ev.node)
+    return args
+
+
 class ClusterScheduler:
     """Deterministic discrete-event MLaaS scheduler."""
 
@@ -117,6 +131,8 @@ class ClusterScheduler:
         preemption: bool = False,
         gang_scoring: bool = False,
         re_expansion: bool = False,
+        tracer=None,
+        registry: Optional[MetricsRegistry] = None,
     ):
         self.cfg = cfg
         self.n = n if n is not None else cfg.nodes_per_side
@@ -144,11 +160,21 @@ class ClusterScheduler:
         # is a pure function of those, so the expansion/shrink ladders'
         # repeated candidate probes cost a dict hit instead of a re-solve
         self._solver_cache: Dict[Tuple[object, object, object], JobMapping] = {}
-        self.mapping_solver_hits = 0
-        self.mapping_solver_misses = 0
+        # observability: one registry backs every cache counter; the tracer
+        # defaults to the ambient one (NULL_TRACER unless a ``tracing``
+        # block is active), so instrumentation is free when disabled
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self._solver_hits = self.registry.counter("mapping_solver.hits")
+        self._solver_misses = self.registry.counter("mapping_solver.misses")
         self._occ = OccupancyIndex(self.n)
-        self._circuit_cache = CircuitShapeCache(cfg, validate=validate_circuits)
-        self._goodput_cache = GoodputCache(cfg)
+        self._circuit_cache = CircuitShapeCache(
+            cfg, validate=validate_circuits, registry=self.registry
+        )
+        self._goodput_cache = GoodputCache(cfg, registry=self.registry)
+        # keep mid-run summaries honest: summary()/policy_summary() pull the
+        # live cache counters instead of whatever the last run() left behind
+        self.metrics._sync_hook = self._sync_cache_stats
         # per-switch circuit refcounts: uninstall removes a circuit only
         # when its last owner releases it (jobs on disjoint rectangles use
         # disjoint ports, so counts stay at 1 in practice — the refcount
@@ -196,6 +222,13 @@ class ClusterScheduler:
     def _sync_occupancy(self) -> None:
         if self._occ_dirty:
             self.metrics.set_occupancy(self._occupied_count, self.healthy_nodes())
+            if self.tracer.enabled:
+                # Perfetto counter track: utilization over simulated events
+                self.tracer.counter(
+                    "occupancy",
+                    occupied=self._occupied_count,
+                    healthy=self.healthy_nodes(),
+                )
             self._occ_dirty = False
 
     def _job_mapping(self, job: JobSpec) -> JobMapping:
@@ -210,12 +243,22 @@ class ClusterScheduler:
         key = (job.arch, job.plan, job.shape)
         jmap = self._solver_cache.get(key)
         if jmap is None:
-            self.mapping_solver_misses += 1
+            self._solver_misses.inc()
             jmap = plan_job_mapping(self.cfg, job)
             self._solver_cache[key] = jmap
         else:
-            self.mapping_solver_hits += 1
+            self._solver_hits.inc()
         return jmap
+
+    @property
+    def mapping_solver_hits(self) -> int:
+        """Legacy view of the ``mapping_solver.hits`` registry counter."""
+        return self._solver_hits.value
+
+    @property
+    def mapping_solver_misses(self) -> int:
+        """Legacy view of the ``mapping_solver.misses`` registry counter."""
+        return self._solver_misses.value
 
     def _sync_cache_stats(self) -> None:
         self.metrics.circuit_cache_hits = self._circuit_cache.hits
@@ -243,6 +286,9 @@ class ClusterScheduler:
         the same patch, so per-switch port discipline always holds for the
         union of live and orphan circuits.
         """
+        trc = self.tracer
+        if trc.enabled:
+            trc.begin("ocs.apply", cat="ocs", switches=len(target))
         patches: List[SwitchPatch] = []
         for key in sorted(target):
             tgt = target[key]
@@ -278,9 +324,20 @@ class ClusterScheduler:
                     if self.circuits.pop(key, None) is not None:
                         self._line_sub(key)
         plan = ReconfigPlan(tuple(patches))
-        return plan, self._account(plan)
+        dt = self._account(plan)
+        if trc.enabled:
+            trc.end(
+                "ocs.apply",
+                patched=len(plan.patches),
+                strokes=plan.circuits_flipped,
+                downtime_s=dt,
+            )
+        return plan, dt
 
     def _uninstall(self, target: CircuitMap) -> Tuple[ReconfigPlan, float]:
+        trc = self.tracer
+        if trc.enabled:
+            trc.begin("ocs.revert", cat="ocs", switches=len(target))
         lazy = self.gang_scoring
         patches: List[SwitchPatch] = []
         for key in sorted(target):
@@ -312,7 +369,15 @@ class ClusterScheduler:
                 elif self.circuits.pop(key, None) is not None:
                     self._line_sub(key)
         plan = ReconfigPlan(tuple(patches))
-        return plan, self._account(plan)
+        dt = self._account(plan)
+        if trc.enabled:
+            trc.end(
+                "ocs.revert",
+                patched=len(plan.patches),
+                strokes=plan.circuits_flipped,
+                downtime_s=dt,
+            )
+        return plan, dt
 
     # -- placement ----------------------------------------------------------
 
@@ -356,6 +421,28 @@ class ClusterScheduler:
         remaining_work_s: Optional[float] = None,
     ) -> bool:
         jmap = jmap or self._job_mapping(job)
+        trc = self.tracer
+        if not trc.enabled:
+            return self._place(job, t, jmap, remaining_work_s)
+        with trc.span(
+            "placement.attempt",
+            cat="scheduler",
+            job=job.job_id,
+            rows_req=jmap.rows_req,
+            cols_req=jmap.cols_req,
+            candidate_rows=sum(
+                1 for r in range(self.n)
+                if bin(self._occ.free_row(r)).count("1") >= jmap.cols_req
+            ),
+        ) as sp:
+            placed = self._place(job, t, jmap, remaining_work_s)
+            sp.set(placed=placed)
+            return placed
+
+    def _place(
+        self, job: JobSpec, t: float, jmap: JobMapping,
+        remaining_work_s: Optional[float],
+    ) -> bool:
         self.metrics.placement_attempts += 1
         if jmap.nodes > self.n * self.n:
             return False
@@ -367,10 +454,20 @@ class ClusterScheduler:
         alloc = self._scan_policy(self._occ, jmap)
         if alloc is None:
             return False
-        target = self._circuit_cache.target_for(jmap.mapping, alloc)
+        trc = self.tracer
+        if trc.enabled:
+            with trc.span("ocs.synthesize", cat="ocs", job=job.job_id):
+                target = self._circuit_cache.target_for(jmap.mapping, alloc)
+        else:
+            target = self._circuit_cache.target_for(jmap.mapping, alloc)
         _, downtime = self._install(target)
         if self.goodput_model == "flow":
-            g = self._goodput_cache.goodput_for(job, jmap.mapping, alloc)
+            if trc.enabled:
+                with trc.span("goodput.estimate", cat="flow", job=job.job_id) as gsp:
+                    g = self._goodput_cache.goodput_for(job, jmap.mapping, alloc)
+                    gsp.set(goodput=g)
+            else:
+                g = self._goodput_cache.goodput_for(job, jmap.mapping, alloc)
         else:
             g = 1.0
         work = job.service_s if remaining_work_s is None else remaining_work_s
@@ -395,6 +492,20 @@ class ClusterScheduler:
         return True
 
     def _drain_backlog(self, t: float) -> None:
+        trc = self.tracer
+        if not trc.enabled:
+            self._drain(t)
+            return
+        if len(self.backlog) == 0:
+            return  # nothing to drain: keep the trace free of no-op spans
+        with trc.span(
+            "backlog.drain", cat="scheduler", backlog=len(self.backlog)
+        ) as sp:
+            placed = self._drain(t)
+            sp.set(placed=placed, remaining=len(self.backlog))
+
+    def _drain(self, t: float) -> int:
+        placed = 0
         placed_any = True
         while placed_any:
             placed_any = False
@@ -406,8 +517,10 @@ class ClusterScheduler:
                     self.backlog.remove(job)
                     self._backlog_seen.pop(job.job_id, None)
                     placed_any = True
+                    placed += 1
                 else:
                     self._backlog_seen[job.job_id] = self._occ.version
+        return placed
 
     # -- preemption ---------------------------------------------------------
 
@@ -473,7 +586,20 @@ class ClusterScheduler:
         ``job`` in the hole; victims requeue (checkpointed: remaining
         work preserved) at the front of their own tiers."""
         jmap = self._job_mapping(job)
-        victims = self.select_victims(job, t, jmap=jmap)
+        trc = self.tracer
+        if trc.enabled:
+            with trc.span(
+                "preempt.select",
+                cat="scheduler",
+                job=job.job_id,
+                candidates=sum(
+                    1 for rj in self.running.values() if rj.job.tier < job.tier
+                ),
+            ) as sp:
+                victims = self.select_victims(job, t, jmap=jmap)
+                sp.set(victims=-1 if victims is None else len(victims))
+        else:
+            victims = self.select_victims(job, t, jmap=jmap)
         if victims is None:
             return False
         for rj in victims:
@@ -705,7 +831,16 @@ class ClusterScheduler:
             ev = self._queue.pop()
             assert ev is not None
             self.metrics.advance(ev.time)
-            self._dispatch(ev)
+            trc = self.tracer
+            if trc.enabled:
+                with trc.span(
+                    "event." + type(ev).__name__,
+                    cat="scheduler",
+                    **_event_trace_args(ev),
+                ):
+                    self._dispatch(ev)
+            else:
+                self._dispatch(ev)
             self._sync_occupancy()
             self.metrics.events_processed += 1
         if until is not None:

@@ -50,6 +50,8 @@ from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import get_tracer
+
 Vertex = Hashable
 
 try:  # optional C-speed single-source BFS (same FIFO tie-breaking)
@@ -174,7 +176,8 @@ class CompiledNetwork:
 
 def _assemble_csr(n: int, src, key, dst, cap, **fields) -> CompiledNetwork:
     """CSR from per-block parallel edge arrays, per-vertex adjacency in
-    (src, key) order — **without** a global sort.
+    (src, key) order — **without** a global sort.  (Traced as
+    ``flow.csr_assemble`` when an ambient tracer is active.)
 
     Contract (every canonical builder below satisfies it):
 
@@ -198,6 +201,16 @@ def _assemble_csr(n: int, src, key, dst, cap, **fields) -> CompiledNetwork:
     violating builder fails loudly here instead of silently mis-slotting
     the symmetry sweep's orbit gathers).
     """
+    trc = get_tracer()
+    if trc.enabled:
+        with trc.span("flow.csr_assemble", cat="flow", vertices=n) as sp:
+            cn = _assemble_csr_impl(n, src, key, dst, cap, **fields)
+            sp.set(edges=cn.num_edges)
+            return cn
+    return _assemble_csr_impl(n, src, key, dst, cap, **fields)
+
+
+def _assemble_csr_impl(n: int, src, key, dst, cap, **fields) -> CompiledNetwork:
     blocks = [
         (
             np.asarray(s, np.int64),
@@ -561,12 +574,20 @@ def bfs_forest(
     ``[B, n]``.  ``parent_e[b, v]`` is the CSR edge id entering ``v`` on
     the BFS tree of ``srcs[b]`` (-1 at the source / unreached); trees are
     identical to the seed engine's (see ``_bfs_levels``).  ``edge_ok``
-    masks out edges (used by the multi-path ECMP).
+    masks out edges (used by the multi-path ECMP).  Traced as
+    ``flow.bfs`` when an ambient tracer is active.
     """
     n = cn.num_vertices
     srcs = np.asarray(srcs, dtype=np.int64)
     B = srcs.size
-    levels, _ = _bfs_levels(cn, srcs, edge_ok=edge_ok)
+    trc = get_tracer()
+    if trc.enabled:
+        with trc.span(
+            "flow.bfs", cat="flow", sources=B, vertices=n
+        ):
+            levels, _ = _bfs_levels(cn, srcs, edge_ok=edge_ok)
+    else:
+        levels, _ = _bfs_levels(cn, srcs, edge_ok=edge_ok)
     parent_e = np.full(B * n, -1, np.int64)
     depth = np.full(B * n, -1, np.int32)
     depth[(np.arange(B, dtype=np.int64) * n) + srcs] = 0
@@ -737,8 +758,21 @@ def alltoall_edge_counts(
     Computed by bottom-up subtree accumulation (O(n · levels) per source
     instead of O(n · hops) path walks); exact int64 counts (order-free,
     so the sweep chunks freely).  Uses the C-speed scipy BFS when
-    available, the batched NumPy kernel otherwise — identical results."""
+    available, the batched NumPy kernel otherwise — identical results.
+    Traced as ``flow.alltoall_counts`` when an ambient tracer is active."""
     chip_ids = cn.chips() if chips is None else np.asarray(chips, np.int64)
+    trc = get_tracer()
+    if trc.enabled:
+        with trc.span(
+            "flow.alltoall_counts", cat="flow", sources=int(chip_ids.size)
+        ):
+            return _alltoall_edge_counts_impl(cn, chip_ids, batch)
+    return _alltoall_edge_counts_impl(cn, chip_ids, batch)
+
+
+def _alltoall_edge_counts_impl(
+    cn: CompiledNetwork, chip_ids: np.ndarray, batch: int
+) -> np.ndarray:
     n = cn.num_vertices
     E = cn.num_edges
     dest_mask = np.zeros(n, bool)
@@ -846,7 +880,23 @@ def route_demands(
     each successive BFS pass excludes links already used for the same
     source, and each demand splits evenly over the paths found (a
     destination unreachable without reusing links keeps fewer paths).
+    Traced as ``flow.route`` when an ambient tracer is active.
     """
+    trc = get_tracer()
+    if trc.enabled:
+        with trc.span(
+            "flow.route", cat="flow",
+            demands=len(demands), num_paths=num_paths,
+        ):
+            return _route_demands_impl(cn, demands, num_paths)
+    return _route_demands_impl(cn, demands, num_paths)
+
+
+def _route_demands_impl(
+    cn: CompiledNetwork,
+    demands: Dict[Tuple[int, int], float],
+    num_paths: int,
+) -> np.ndarray:
     by_src: Dict[int, List[Tuple[int, float]]] = {}
     for (s, t), v in demands.items():
         if s != t and v > 0:
@@ -947,8 +997,23 @@ def symmetric_alltoall_counts(
     ``L(e) = Σ_classes Σ_g counts_class(π_g(e))`` for every representative
     edge ``e`` (edges out of the representative node block — one per edge
     orbit).  Integer arithmetic, so the result equals the brute-force
-    O(N²) sweep *exactly*.  Returns ``(rep_edge_ids, counts)``.
+    O(N²) sweep *exactly*.  Returns ``(rep_edge_ids, counts)``.  Traced
+    as ``flow.symmetry_sweep`` (with a nested ``flow.orbit_gather`` for
+    the group-orbit accumulation) when an ambient tracer is active.
     """
+    trc = get_tracer()
+    if trc.enabled:
+        with trc.span(
+            "flow.symmetry_sweep", cat="flow",
+            vertices=cn.num_vertices, edges=cn.num_edges,
+        ):
+            return _symmetric_alltoall_counts_impl(cn, g_chunk)
+    return _symmetric_alltoall_counts_impl(cn, g_chunk)
+
+
+def _symmetric_alltoall_counts_impl(
+    cn: CompiledNetwork, g_chunk: int
+) -> Tuple[np.ndarray, np.ndarray]:
     if cn.star_core is not None:
         # fat-tree star: source s loads its own uplink N-1 times and every
         # chip's downlink once; summed over sources each edge carries N-1
@@ -985,6 +1050,12 @@ def symmetric_alltoall_counts(
         )
     C = subtree_edge_counts(cn, parent_e, depth, reps)
     K = np.zeros(re.size, np.int64)
+    trc = get_tracer()
+    if trc.enabled:
+        trc.begin(
+            "flow.orbit_gather", cat="flow",
+            group=int(sx.size), rep_edges=int(re.size),
+        )
     for lo in range(0, sx.size, g_chunk):
         gx = sx[lo:lo + g_chunk, None]
         gy = sy[lo:lo + g_chunk, None]
@@ -993,6 +1064,8 @@ def symmetric_alltoall_counts(
         u2 = (X2 * sym.scale + Y2) * m2 + re_chip[None, :]
         e2 = cn.indptr[u2] + re_slot[None, :]
         K += C[e2].sum(axis=0)
+    if trc.enabled:
+        trc.end("flow.orbit_gather")
     return re, K
 
 

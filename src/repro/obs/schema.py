@@ -1,0 +1,96 @@
+"""Minimal Chrome trace-event schema validation.
+
+``validate_trace`` checks the structural invariants a Perfetto-loadable
+trace must satisfy — it is the contract the CI bench checks (and
+``tests/test_obs.py``) enforce on every emitted trace, so a broken
+instrumentation point (an unterminated span, an event missing required
+fields, a non-monotonic clock) fails loudly instead of producing a trace
+the viewer silently mis-renders.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Mapping, Tuple, Union
+
+_PHASES = {"B", "E", "i", "I", "C", "M", "X"}
+_REQUIRED = ("name", "ph", "pid", "tid")
+
+
+def validate_trace(
+    trace: Union[Mapping, Iterable[Mapping]],
+) -> Dict[str, int]:
+    """Validate a trace (the ``to_dict()`` object or a raw event list).
+
+    Checks, raising ``ValueError`` on the first violation:
+
+    * every event carries ``name``/``ph``/``pid``/``tid``, a known
+      phase, and (except metadata) a numeric non-negative ``ts``;
+    * per ``(pid, tid)``, timestamps are non-decreasing in emission
+      order (the tracer clock is monotonic — a violation means events
+      were reordered or the clock is broken);
+    * ``B``/``E`` span events nest properly: every ``E`` closes the most
+      recent open ``B`` of the same name, and no span stays open.
+
+    Returns summary stats: ``{"events": N, "spans": S, "instants": I,
+    "counters": C}``.
+    """
+    if isinstance(trace, Mapping):
+        events = trace.get("traceEvents")
+        if not isinstance(events, list):
+            raise ValueError("trace object has no 'traceEvents' list")
+    else:
+        events = list(trace)
+    last_ts: Dict[Tuple[object, object], float] = {}
+    open_spans: Dict[Tuple[object, object], List[str]] = {}
+    spans = instants = counters = 0
+    for i, ev in enumerate(events):
+        if not isinstance(ev, Mapping):
+            raise ValueError(f"event {i} is not an object: {ev!r}")
+        for field in _REQUIRED:
+            if field not in ev:
+                raise ValueError(f"event {i} missing field {field!r}: {ev!r}")
+        ph = ev["ph"]
+        if ph not in _PHASES:
+            raise ValueError(f"event {i} has unknown phase {ph!r}")
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            raise ValueError(f"event {i} has bad ts {ts!r}")
+        key = (ev["pid"], ev["tid"])
+        prev = last_ts.get(key)
+        if prev is not None and ts < prev:
+            raise ValueError(
+                f"event {i} ts {ts} not monotonic on {key} (prev {prev})"
+            )
+        last_ts[key] = ts
+        if ph == "B":
+            open_spans.setdefault(key, []).append(ev["name"])
+        elif ph == "E":
+            stack = open_spans.get(key)
+            if not stack:
+                raise ValueError(
+                    f"event {i}: span end {ev['name']!r} with no open span"
+                )
+            if stack[-1] != ev["name"]:
+                raise ValueError(
+                    f"event {i}: span end {ev['name']!r} does not match "
+                    f"open span {stack[-1]!r}"
+                )
+            stack.pop()
+            spans += 1
+        elif ph in ("i", "I"):
+            instants += 1
+        elif ph == "C":
+            counters += 1
+        elif ph == "X":
+            spans += 1
+    for key, stack in open_spans.items():
+        if stack:
+            raise ValueError(f"unterminated span(s) on {key}: {stack!r}")
+    return {
+        "events": len(events),
+        "spans": spans,
+        "instants": instants,
+        "counters": counters,
+    }

@@ -1,0 +1,333 @@
+"""Observability stack tests (ISSUE 6).
+
+The load-bearing guarantees:
+
+* instrumentation is pure observation — a seeded policy run produces a
+  byte-identical scheduling fingerprint with tracing on or off;
+* the disabled path never constructs event objects (a strict tracer
+  whose emit methods raise survives a full instrumented run);
+* emitted traces satisfy the Chrome trace-event schema contract
+  (required fields, monotonic timestamps, matched B/E spans);
+* the metrics registry backs the legacy cache-stat attributes, and
+  ``summary()`` reflects cache activity that happened after the last
+  ``run()`` (the mid-run staleness fix).
+"""
+
+import itertools
+import json
+
+import pytest
+
+from repro.cluster import (
+    ClusterScheduler,
+    iter_failure_trace,
+    iter_poisson_trace,
+)
+from repro.core.topology import RailXConfig
+from repro.obs import (
+    NULL_TRACER,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NullTracer,
+    Tracer,
+    get_tracer,
+    set_tracer,
+    tracing,
+    validate_trace,
+)
+from repro.obs.tracer import NULL_SPAN
+
+
+def _policy_events(side, duration_s, seed=42):
+    return list(itertools.chain(
+        iter_poisson_trace(
+            seed=seed, duration_s=duration_s, arrival_rate_per_h=24.0,
+            mean_service_s=2 * 3600.0, tier_weights=(8, 2, 1),
+        ),
+        iter_failure_trace(
+            n=side, seed=seed, duration_s=duration_s,
+            mtbf_node_s=2e5, mttr_s=4 * 3600.0,
+        ),
+    ))
+
+
+def _policy_run(side, events, tracer=None):
+    cfg = RailXConfig(m=4, n=4, R=2 * side)
+    sched = ClusterScheduler(
+        cfg, n=side, policy="best_fit", goodput_model="flow",
+        validate_circuits=False, preemption=True, gang_scoring=True,
+        re_expansion=True, tracer=tracer,
+    )
+    metrics = sched.run(events, until=None)
+    return sched, metrics
+
+
+def _fingerprint(metrics):
+    return [
+        (jid, r.start_t, r.finish_t, r.nodes, r.goodput,
+         r.migrations, r.shrinks, r.preemptions, r.expansions)
+        for jid, r in sorted(metrics.records.items())
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Tracing on vs off: byte-identical scheduling
+# ---------------------------------------------------------------------------
+
+
+class TestTracedIdentity:
+    def test_policy_run_fingerprint_identical(self):
+        """Seeded 32x32 policy run: tracing must not move a single
+        scheduling decision."""
+        side = 32
+        events = _policy_events(side, duration_s=12 * 3600.0)
+        _, m_off = _policy_run(side, events)
+        tracer = Tracer()
+        _, m_on = _policy_run(side, events, tracer=tracer)
+        assert _fingerprint(m_on) == _fingerprint(m_off)
+        assert m_on.summary() == m_off.summary()
+        assert m_on.policy_summary() == m_off.policy_summary()
+        # and the traced run actually recorded the scheduler's phases
+        assert {
+            "event.JobSubmit", "event.JobFinish", "placement.attempt",
+            "ocs.apply", "ocs.revert", "backlog.drain",
+        } <= tracer.span_names()
+
+    def test_ambient_tracer_pickup(self):
+        """A scheduler built inside ``tracing(...)`` uses that tracer."""
+        tracer = Tracer()
+        with tracing(tracer):
+            sched, _ = _policy_run(16, _policy_events(16, 4 * 3600.0))
+        assert sched.tracer is tracer
+        assert tracer.events
+        assert get_tracer() is NULL_TRACER  # restored on exit
+
+
+# ---------------------------------------------------------------------------
+# Disabled path: no event objects, shared singletons
+# ---------------------------------------------------------------------------
+
+
+class _StrictDisabledTracer(NullTracer):
+    """enabled=False tracer whose emit methods explode: any call proves
+    an instrumentation site skipped its ``if tracer.enabled:`` guard."""
+
+    def begin(self, name, cat="repro", **args):
+        raise AssertionError(f"begin({name!r}) called while disabled")
+
+    def end(self, name, **args):
+        raise AssertionError(f"end({name!r}) called while disabled")
+
+    def instant(self, name, cat="repro", **args):
+        raise AssertionError(f"instant({name!r}) called while disabled")
+
+    def counter(self, name, **values):
+        raise AssertionError(f"counter({name!r}) called while disabled")
+
+    def span(self, name, cat="repro", **args):
+        raise AssertionError(f"span({name!r}) called while disabled")
+
+
+class TestDisabledShortCircuit:
+    def test_null_tracer_allocates_nothing(self):
+        assert NULL_TRACER.enabled is False
+        assert NULL_TRACER.span("x") is NULL_SPAN
+        assert NULL_TRACER.span("y", cat="z", a=1) is NULL_SPAN
+        with NULL_TRACER.span("x") as sp:
+            assert sp is NULL_SPAN
+            assert sp.set(result=1) is NULL_SPAN
+        assert NULL_TRACER.begin("x") is None
+        assert NULL_TRACER.end("x") is None
+        assert not hasattr(NULL_TRACER, "events")
+
+    def test_scheduler_never_emits_when_disabled(self):
+        strict = _StrictDisabledTracer()
+        sched, metrics = _policy_run(
+            16, _policy_events(16, 6 * 3600.0), tracer=strict
+        )
+        assert metrics.events_processed > 0
+
+    def test_flow_engine_never_emits_when_disabled(self):
+        from repro.core.compiled_flow import (
+            alltoall_throughput_compiled,
+            build_compiled_railx_hyperx,
+            symmetric_alltoall_throughput,
+        )
+
+        with tracing(_StrictDisabledTracer()):
+            cn = build_compiled_railx_hyperx(5, 2, 2.0)
+            assert symmetric_alltoall_throughput(cn, 8.0) > 0
+            assert alltoall_throughput_compiled(cn, 8.0) > 0
+
+    def test_default_is_null_tracer(self):
+        assert get_tracer() is NULL_TRACER
+        sched = ClusterScheduler(RailXConfig(m=4, n=4, R=32), n=16)
+        assert sched.tracer is NULL_TRACER
+
+
+# ---------------------------------------------------------------------------
+# Trace schema
+# ---------------------------------------------------------------------------
+
+
+class TestTraceSchema:
+    def test_emitted_trace_validates(self, tmp_path):
+        tracer = Tracer(process="test")
+        with tracing(tracer):
+            _policy_run(16, _policy_events(16, 6 * 3600.0))
+        stats = validate_trace(tracer.to_dict())
+        assert stats["spans"] > 0
+        # round-trips through JSON (what --trace writes / Perfetto loads)
+        path = tmp_path / "trace.json"
+        tracer.write(str(path))
+        loaded = json.loads(path.read_text())
+        assert isinstance(loaded["traceEvents"], list)
+        assert validate_trace(loaded) == stats
+        names = {ev["name"] for ev in loaded["traceEvents"]}
+        assert "process_name" in names          # metadata event
+        assert "placement.attempt" in names
+
+    def test_required_fields_enforced(self):
+        with pytest.raises(ValueError, match="missing field"):
+            validate_trace([{"name": "x", "ph": "B"}])
+
+    def test_unknown_phase_rejected(self):
+        with pytest.raises(ValueError, match="unknown phase"):
+            validate_trace(
+                [{"name": "x", "ph": "Q", "pid": 1, "tid": 1, "ts": 0}]
+            )
+
+    def test_monotonic_ts_enforced(self):
+        ev = lambda ts, ph, name: {
+            "name": name, "ph": ph, "pid": 1, "tid": 1, "ts": ts,
+        }
+        with pytest.raises(ValueError, match="monotonic"):
+            validate_trace([ev(5.0, "B", "a"), ev(3.0, "E", "a")])
+
+    def test_span_matching_enforced(self):
+        ev = lambda ts, ph, name: {
+            "name": name, "ph": ph, "pid": 1, "tid": 1, "ts": ts,
+        }
+        with pytest.raises(ValueError, match="no open span"):
+            validate_trace([ev(1.0, "E", "a")])
+        with pytest.raises(ValueError, match="does not match"):
+            validate_trace([ev(1.0, "B", "a"), ev(2.0, "E", "b")])
+        with pytest.raises(ValueError, match="unterminated"):
+            validate_trace([ev(1.0, "B", "a")])
+
+    def test_tracer_rejects_mismatched_end(self):
+        tracer = Tracer()
+        tracer.begin("a")
+        with pytest.raises(ValueError, match="unmatched span end"):
+            tracer.end("b")
+
+    def test_span_exit_args_attach_to_end_event(self):
+        tracer = Tracer()
+        with tracer.span("s", cat="t", going_in=1) as sp:
+            sp.set(coming_out=2)
+        b, e = tracer.events
+        assert b["args"] == {"going_in": 1}
+        assert e["args"] == {"coming_out": 2}
+        assert tracer.phase_totals()["s"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+
+class TestMetricsRegistry:
+    def test_get_or_create_identity(self):
+        reg = MetricsRegistry()
+        c = reg.counter("a.b")
+        c.inc()
+        c.inc(4)
+        assert reg.counter("a.b") is c
+        assert reg.counter("a.b").value == 5
+        assert "a.b" in reg
+        assert reg.snapshot()["a.b"] == 5
+
+    def test_kind_mismatch_raises(self):
+        reg = MetricsRegistry()
+        reg.counter("x")
+        with pytest.raises(TypeError):
+            reg.gauge("x")
+        with pytest.raises(TypeError):
+            reg.histogram("x")
+
+    def test_gauge_and_histogram(self):
+        reg = MetricsRegistry()
+        reg.gauge("g").set(2.5)
+        h = reg.histogram("h")
+        for v in (1.0, 2.0, 4.0, 8.0, 100.0):
+            h.observe(v)
+        snap = reg.snapshot()
+        assert snap["g"] == 2.5
+        assert snap["h"]["count"] == 5
+        assert snap["h"]["min"] == 1.0
+        assert snap["h"]["max"] == 100.0
+        assert snap["h"]["p50"] <= snap["h"]["p99"]
+
+    def test_tracer_feeds_span_histograms(self):
+        reg = MetricsRegistry()
+        tracer = Tracer(registry=reg)
+        with tracer.span("work"):
+            pass
+        with tracer.span("work"):
+            pass
+        assert reg.snapshot()["span.work"]["count"] == 2
+
+    def test_scheduler_counters_back_legacy_attributes(self):
+        reg = MetricsRegistry()
+        sched, _ = _scheduler_after_run(reg)
+        snap = reg.snapshot()
+        assert snap["circuit_cache.hits"] == sched._circuit_cache.hits
+        assert snap["circuit_cache.misses"] == sched._circuit_cache.misses
+        assert snap["goodput_cache.hits"] == sched._goodput_cache.hits
+        assert snap["mapping_solver.hits"] == sched.mapping_solver_hits
+        assert snap["mapping_solver.misses"] == sched.mapping_solver_misses
+        assert sched._circuit_cache.hits > 0
+        assert sched.mapping_solver_misses > 0
+
+
+def _scheduler_after_run(registry=None):
+    cfg = RailXConfig(m=4, n=4, R=32)
+    sched = ClusterScheduler(
+        cfg, n=16, goodput_model="flow", validate_circuits=False,
+        registry=registry,
+    )
+    metrics = sched.run(
+        iter_poisson_trace(
+            seed=3, duration_s=12 * 3600.0, arrival_rate_per_h=12.0,
+            mean_service_s=3600.0,
+        ),
+        until=8 * 3600.0,   # stop mid-stream: jobs still running
+    )
+    return sched, metrics
+
+
+# ---------------------------------------------------------------------------
+# Mid-run summary freshness (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+class TestMidRunSync:
+    def test_summary_reflects_post_run_cache_activity(self):
+        sched, metrics = _scheduler_after_run()
+        s0 = sched.metrics.summary()
+        assert s0["circuit_cache_hits"] == sched._circuit_cache.hits
+        # new cache activity outside run(): before the _sync_hook fix,
+        # summary() kept reporting the stats from run()'s final sync
+        rj = next(iter(sched.running.values()))
+        sched._circuit_cache.target_for(rj.jmap.mapping, rj.alloc)
+        s1 = sched.metrics.summary()
+        assert s1["circuit_cache_hits"] == s0["circuit_cache_hits"] + 1
+        assert s1["circuit_cache_hits"] == sched._circuit_cache.hits
+
+    def test_unattached_metrics_summary_still_works(self):
+        from repro.cluster.metrics import TimelineMetrics
+
+        m = TimelineMetrics(grid_nodes=4)
+        assert m.summary()["events"] == 0   # no hook installed: no-op
