@@ -265,15 +265,21 @@ def _run(args) -> None:
     rows = bench(FULL_SIDES)
     policy_rows = policy_sweep(side=16, duration_h=24.0)
     check_policy_sweep(policy_rows)
+    # bench_chaos.py owns the ``chaos`` section of the same file: keep it
+    data = {}
+    if os.path.exists(OUT):
+        try:
+            with open(OUT) as f:
+                data = json.load(f)
+        except ValueError:
+            data = {}
+    data.update(
+        bench="cluster",
+        rows=rows,
+        policy_sweep={"grid": "16x16", "rows": policy_rows},
+    )
     with open(OUT, "w") as f:
-        json.dump(
-            {
-                "bench": "cluster",
-                "rows": rows,
-                "policy_sweep": {"grid": "16x16", "rows": policy_rows},
-            },
-            f, indent=2,
-        )
+        json.dump(data, f, indent=2)
     print(f"wrote {os.path.relpath(OUT)}")
 
 

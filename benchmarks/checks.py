@@ -40,6 +40,7 @@ from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
+import bench_chaos
 import bench_cluster
 import bench_simulator
 
@@ -260,6 +261,55 @@ def _policy_check(duration_h: float, ref_wall_s: Optional[float]) -> Check:
     )
 
 
+def _chaos_check(
+    scenario: str,
+    reference: Mapping,
+    *,
+    duration_s: float,
+    jobs: int,
+    circuit_repair: bool = True,
+) -> Check:
+    """Replay one ``bench_chaos`` scenario (its own four invariants run
+    inside ``run_scenario`` and abort the check on violation) and pin the
+    survivability figures as fidelity values."""
+    fault_kwargs = dict(bench_chaos.SCENARIOS)[scenario]
+    validate = scenario == "switch_heavy"
+
+    def run() -> Mapping:
+        row, _ = bench_chaos.run_scenario(
+            reference.get("fabric", "railx-hyperx"), scenario, fault_kwargs,
+            duration_s=duration_s, jobs=jobs,
+            circuit_repair=circuit_repair, validate_circuits=validate,
+        )
+        return row
+
+    return Check(
+        name=f"cluster/chaos/{scenario}/{duration_s / 3600.0:g}h",
+        run=run,
+        fidelity={k: reference[k] for k in _CHAOS_FIDELITY},
+        sanity=(
+            ("faults injected", lambda r: (
+                r["node_faults"] + r["switch_faults"] + r["link_faults"] > 0
+            )),
+            ("work conserved", lambda r: r["max_conservation_err"] <= 1e-6),
+        ),
+        ref_wall_s=float(reference["wall_s"]),
+        trace_spans=(
+            ("event.SwitchFail", "event.SwitchRecover",
+             "fault.repair", "fault.restore")
+            if scenario == "switch_heavy" and circuit_repair else ()
+        ),
+    )
+
+
+_CHAOS_FIDELITY = (
+    "events", "jobs", "finished", "utilization", "mean_goodput",
+    "reconfig_rounds", "circuits_flipped", "node_faults", "switch_faults",
+    "link_faults", "repairs", "repair_fallbacks", "lost_work_s",
+    "mean_mttr_s", "quarantines", "goodput_under_failure_ratio",
+)
+
+
 # ---------------------------------------------------------------------------
 # Smoke references, recorded in this container (regenerate by running the
 # check's ``run`` and pasting the fidelity values + a representative wall)
@@ -282,6 +332,17 @@ SMOKE_GRID_16_FULL = {
     "circuit_cache_misses": 8, "goodput_cache_hits": 307,
     "goodput_cache_misses": 8,
     "wall_s": 0.71,
+}
+
+SMOKE_CHAOS_SWITCH_HEAVY = {
+    "fabric": "railx-hyperx",
+    "events": 123, "jobs": 8, "finished": 8, "utilization": 0.3833,
+    "mean_goodput": 0.8833, "reconfig_rounds": 46,
+    "circuits_flipped": 16408, "node_faults": 0, "switch_faults": 19,
+    "link_faults": 0, "repairs": 69, "repair_fallbacks": 0,
+    "lost_work_s": 0.0, "mean_mttr_s": 2146.941, "quarantines": 0,
+    "goodput_under_failure_ratio": 0.9152,
+    "wall_s": 0.15,
 }
 
 SMOKE_EXACT_RAILX_8 = {
@@ -313,6 +374,10 @@ def smoke_table() -> Tuple[Check, ...]:
         _symmetry_check("railx", 8, SMOKE_SYMMETRY[("railx", 8)]),
         _symmetry_check("torus", 8, SMOKE_SYMMETRY[("torus", 8)]),
         _policy_check(duration_h=8.0, ref_wall_s=None),
+        _chaos_check(
+            "switch_heavy", SMOKE_CHAOS_SWITCH_HEAVY,
+            duration_s=4 * 3600.0, jobs=8,
+        ),
     )
 
 
@@ -329,6 +394,12 @@ def full_table() -> Tuple[Check, ...]:
         checks.append(_policy_check(
             duration_h=24.0,
             ref_wall_s=sum(r["wall_s"] for r in sweep["rows"]),
+        ))
+    for row in bc.get("chaos", {}).get("rows", ()):
+        checks.append(_chaos_check(
+            row["scenario"], row,
+            duration_s=8 * 3600.0, jobs=12,
+            circuit_repair=row.get("circuit_repair", True),
         ))
     with open(BENCH_SIMULATOR) as f:
         bs = json.load(f)

@@ -14,10 +14,16 @@ Prints ``name,us_per_call,derived`` CSV rows per the harness contract:
   bench_collectives   executable schedules: HLO collective bytes (Eq. 8)
   bench_kernels       Pallas kernels vs oracles (interpret mode)
   bench_dryrun        roofline table from results/dryrun
+
+``--trace out.json`` records the whole harness as a Chrome trace-event
+JSON (open in https://ui.perfetto.dev): every instrumented layer the
+benchmarks exercise — flow solves, goodput estimates, OCS synthesis —
+emits its spans into one timeline.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -269,7 +275,7 @@ def bench_dryrun() -> None:
         _row("dryrun", us, "no_results__run_launch.dryrun_first")
 
 
-def main() -> None:
+def _run_all() -> None:
     print("name,us_per_call,derived")
     bench_table2()
     bench_table6()
@@ -281,6 +287,27 @@ def main() -> None:
     bench_collectives()
     bench_kernels()
     bench_dryrun()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--trace", metavar="OUT.json", default=None,
+        help="record a Chrome trace-event JSON of the whole harness "
+             "(open in https://ui.perfetto.dev)",
+    )
+    args = ap.parse_args()
+
+    if args.trace:
+        from repro.obs import Tracer, tracing
+
+        tracer = Tracer(process="bench-run")
+        with tracing(tracer):
+            _run_all()
+        tracer.write(args.trace)
+        print(f"wrote trace {args.trace}")
+    else:
+        _run_all()
 
 
 if __name__ == "__main__":

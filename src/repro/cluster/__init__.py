@@ -59,8 +59,20 @@ from .events import (
     EventQueue,
     JobFinish,
     JobSubmit,
+    LinkFail,
+    LinkRecover,
     NodeFail,
     NodeRecover,
+    QuarantineRelease,
+    SwitchFail,
+    SwitchRecover,
+)
+from .faults import (
+    FaultDomain,
+    FlapTracker,
+    QuarantineConfig,
+    link_hits_circuits,
+    synthesize_degraded,
 )
 from .jobs import (
     JobMapping,
@@ -95,9 +107,11 @@ from .reconfig import (
 )
 from .scheduler import ClusterScheduler
 from .trace import (
+    fault_domain_trace,
     fig20_trace,
     failure_trace,
     iter_failure_trace,
+    iter_fault_domain_trace,
     iter_poisson_trace,
     poisson_trace,
     replay_trace,
@@ -108,13 +122,21 @@ __all__ = [
     "ClusterScheduler",
     "Event",
     "EventQueue",
+    "FaultDomain",
+    "FlapTracker",
     "GoodputCache",
     "JobFinish",
     "JobMapping",
     "JobSpec",
     "JobSubmit",
+    "LinkFail",
+    "LinkRecover",
     "NodeFail",
     "NodeRecover",
+    "QuarantineConfig",
+    "QuarantineRelease",
+    "SwitchFail",
+    "SwitchRecover",
     "OccupancyIndex",
     "POLICIES",
     "REFERENCE_POLICIES",
@@ -131,13 +153,17 @@ __all__ = [
     "diff_circuits",
     "estimate_goodput",
     "failure_trace",
+    "fault_domain_trace",
     "fig20_trace",
     "first_fit",
     "gang_scored_fit",
     "get_policy",
     "iter_failure_trace",
+    "iter_fault_domain_trace",
     "iter_poisson_trace",
     "job_target_circuits",
+    "link_hits_circuits",
+    "synthesize_degraded",
     "make_job",
     "model_spec_from_config",
     "plan_job_mapping",

@@ -16,6 +16,8 @@ from typing import Iterable, List, Optional, Tuple, Union
 from .jobs import JobSpec
 
 Coord = Tuple[int, int]
+SwitchKey = Tuple[str, int, int]      # (dim, group, rail) as in reconfig
+LinkId = Tuple[Coord, str, int]       # (node, dim, rail): one transceiver
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,11 +55,79 @@ class NodeRecover:
     node: Coord
 
 
-Event = Union[JobSubmit, JobFinish, NodeFail, NodeRecover]
+@dataclasses.dataclass(frozen=True)
+class SwitchFail:
+    """An OCS row/column switch dies: every circuit it hosts goes dark.
+
+    The nodes it serves stay healthy — only the rail it carries is lost,
+    so affected jobs first attempt a circuit *repair* (re-synthesis over
+    the surviving rails) before the migrate/shrink/requeue ladder.
+    """
+
+    time: float
+    switch: SwitchKey
+
+
+@dataclasses.dataclass(frozen=True)
+class SwitchRecover:
+    """A failed switch returns (blank: its circuits must be reprogrammed)."""
+
+    time: float
+    switch: SwitchKey
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkFail:
+    """One node's transceiver on one rail dies: circuits through that
+    node's port pair on switch ``(dim, line-of-node, rail)`` go dark."""
+
+    time: float
+    node: Coord
+    dim: str                          # "X" (row rail) or "Y" (column rail)
+    rail: int
+
+    @property
+    def link(self) -> LinkId:
+        return (self.node, self.dim, self.rail)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkRecover:
+    time: float
+    node: Coord
+    dim: str
+    rail: int
+
+    @property
+    def link(self) -> LinkId:
+        return (self.node, self.dim, self.rail)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuarantineRelease:
+    """Internal event: a flap-quarantined entity finishes its burn-in and
+    rejoins placement.  Scheduled by the scheduler itself (never appears
+    in input traces)."""
+
+    time: float
+    kind: str                         # "node" | "switch"
+    node: Optional[Coord] = None
+    switch: Optional[SwitchKey] = None
+
+
+Event = Union[
+    JobSubmit, JobFinish, NodeFail, NodeRecover,
+    SwitchFail, SwitchRecover, LinkFail, LinkRecover, QuarantineRelease,
+]
 
 # same-instant ordering: failures first (they may evict), then finishes and
 # recoveries (they free capacity), then submissions (they consume it)
-_PRIORITY = {NodeFail: 0, JobFinish: 1, NodeRecover: 1, JobSubmit: 2}
+_PRIORITY = {
+    NodeFail: 0, SwitchFail: 0, LinkFail: 0,
+    JobFinish: 1, NodeRecover: 1, SwitchRecover: 1, LinkRecover: 1,
+    QuarantineRelease: 1,
+    JobSubmit: 2,
+}
 
 
 class EventQueue:

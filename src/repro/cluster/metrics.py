@@ -214,10 +214,13 @@ class GoodputCache:
     ``misses`` attributes remain as properties over those counters.
     """
 
-    def __init__(self, cfg: RailXConfig, registry=None):
+    def __init__(
+        self, cfg: RailXConfig, registry=None, fabric: str = "railx-hyperx"
+    ):
         from ..obs import MetricsRegistry  # local: keep cluster importable alone
 
         self.cfg = cfg
+        self.fabric = fabric
         self._cache: Dict[Tuple[object, ...], float] = {}
         self.registry = registry if registry is not None else MetricsRegistry()
         self._hits = self.registry.counter("goodput_cache.hits")
@@ -241,7 +244,9 @@ class GoodputCache:
         g = self._cache.get(key)
         if g is None:
             self._misses.inc()
-            g = estimate_goodput(self.cfg, job, mapping, alloc)
+            g = estimate_goodput(
+                self.cfg, job, mapping, alloc, fabric=self.fabric
+            )
             self._cache[key] = g
         else:
             self._hits.inc()
@@ -276,6 +281,8 @@ class JobRecord:
     shrinks: int = 0
     expansions: int = 0
     preemptions: int = 0          # times this job was preemption-evicted
+    repairs: int = 0              # in-place circuit repairs (degrade/heal)
+    lost_work_s: float = 0.0      # work lost to checkpoint rollback
     segments: List[RunSegment] = dataclasses.field(default_factory=list)
 
     @property
@@ -322,6 +329,19 @@ class TimelineMetrics:
     placement_scans: int = 0               # attempts that ran a policy scan
     preemptions: int = 0                   # victim evictions (policy engine)
     expansions: int = 0                    # shrunken jobs grown back
+    # survivability (reported via survivability_summary(), never summary():
+    # the default-trace summary keys stay exactly the seed set)
+    node_faults: int = 0                   # NodeFail events observed
+    switch_faults: int = 0                 # SwitchFail events observed
+    link_faults: int = 0                   # LinkFail events observed
+    repairs: int = 0                       # successful in-place circuit repairs
+    repair_fallbacks: int = 0              # repairs that fell to the ladder
+    lost_work_s: float = 0.0               # checkpoint-rollback work lost
+    quarantines: int = 0                   # entities sent to flap burn-in
+    mttr_total_s: float = 0.0              # summed fail->restore intervals
+    mttr_count: int = 0                    # restores with a matching fail
+    degraded_work_s: float = 0.0           # work run in degraded segments
+    degraded_factor_work_s: float = 0.0    # sum(factor * work) over those
     circuit_cache_hits: int = 0
     circuit_cache_misses: int = 0
     goodput_cache_hits: int = 0
@@ -396,6 +416,31 @@ class TimelineMetrics:
                 )
                 for t in tiers
             },
+        }
+
+    def survivability_summary(self) -> Dict[str, object]:
+        """Failure-response figures (separate from :meth:`summary` for the
+        same reason as :meth:`policy_summary`): fault counts per domain,
+        the repair-vs-ladder split, checkpoint work lost, observed mean
+        time-to-restore, and goodput under failure relative to fault-free
+        (the work-weighted mean degradation factor of repaired segments —
+        1.0 when nothing ever ran degraded)."""
+        self._sync_external()
+        return {
+            "node_faults": self.node_faults,
+            "switch_faults": self.switch_faults,
+            "link_faults": self.link_faults,
+            "repairs": self.repairs,
+            "repair_fallbacks": self.repair_fallbacks,
+            "lost_work_s": round(self.lost_work_s, 3),
+            "mean_mttr_s": round(
+                self.mttr_total_s / self.mttr_count, 3
+            ) if self.mttr_count else 0.0,
+            "quarantines": self.quarantines,
+            "degraded_work_s": round(self.degraded_work_s, 3),
+            "goodput_under_failure_ratio": round(
+                self.degraded_factor_work_s / self.degraded_work_s, 4
+            ) if self.degraded_work_s > 0 else 1.0,
         }
 
     def summary(self) -> Dict[str, float]:

@@ -124,6 +124,17 @@ class OccupancyIndex:
                 self.free_count += 1
         self.version += 1
 
+    def touch(self) -> None:
+        """Bump ``version`` without changing the free set.
+
+        Placement outcomes depend on more than node occupancy once
+        switch/link fault sets enter the picture (degraded placement can
+        fail on a fabric the free set says is fine); the scheduler calls
+        this on every fabric-health change so the backlog watermark's
+        "same version => same result" contract stays sound.
+        """
+        self.version += 1
+
     # -- construction helpers ----------------------------------------------
 
     def clone(self) -> "OccupancyIndex":

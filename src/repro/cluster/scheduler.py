@@ -60,6 +60,7 @@ cost one coordinate relabel instead of a fresh ring synthesis + routing.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, FrozenSet, Iterable, List, Literal, Optional, Set, Tuple
 
 from ..core.availability import JobAllocation
@@ -72,10 +73,23 @@ from .events import (
     EventQueue,
     JobFinish,
     JobSubmit,
+    LinkFail,
+    LinkRecover,
     NodeFail,
     NodeRecover,
+    QuarantineRelease,
+    SwitchFail,
+    SwitchRecover,
 )
 from .backlog import TieredBacklog
+from .faults import (
+    FlapTracker,
+    LinkId,
+    QuarantineConfig,
+    faults_hit_target,
+    link_hits_circuits,
+    synthesize_degraded,
+)
 from .jobs import JobMapping, JobSpec, plan_job_mapping
 from .metrics import GoodputCache, JobRecord, TimelineMetrics
 from .occupancy import OccupancyIndex
@@ -88,6 +102,7 @@ from .reconfig import (
     ReconfigPlan,
     SwitchKey,
     SwitchPatch,
+    _check_port_discipline,
 )
 
 
@@ -102,6 +117,8 @@ class RunningJob:
     resumed_t: float              # when the current run segment started
     expected_finish: float
     epoch: int = 0                # run-segment counter (JobFinish matching)
+    base_goodput: float = 1.0     # fault-free goodput of this placement
+    degradation: float = 1.0      # surviving-rail factor (goodput = base * this)
 
 
 def _event_trace_args(ev: Event) -> Dict[str, object]:
@@ -114,6 +131,18 @@ def _event_trace_args(ev: Event) -> Dict[str, object]:
         args["epoch"] = ev.epoch
     elif isinstance(ev, (NodeFail, NodeRecover)):
         args["node"] = list(ev.node)
+    elif isinstance(ev, (SwitchFail, SwitchRecover)):
+        args["switch"] = list(ev.switch)
+    elif isinstance(ev, (LinkFail, LinkRecover)):
+        args["node"] = list(ev.node)
+        args["dim"] = ev.dim
+        args["rail"] = ev.rail
+    elif isinstance(ev, QuarantineRelease):
+        args["kind"] = ev.kind
+        if ev.node is not None:
+            args["node"] = list(ev.node)
+        if ev.switch is not None:
+            args["switch"] = list(ev.switch)
     return args
 
 
@@ -133,6 +162,10 @@ class ClusterScheduler:
         re_expansion: bool = False,
         tracer=None,
         registry: Optional[MetricsRegistry] = None,
+        fabric: str = "railx-hyperx",
+        circuit_repair: bool = True,
+        checkpoint_interval_s: Optional[float] = None,
+        quarantine: Optional[QuarantineConfig] = None,
     ):
         self.cfg = cfg
         self.n = n if n is not None else cfg.nodes_per_side
@@ -148,6 +181,21 @@ class ClusterScheduler:
         self.preemption = preemption
         self.gang_scoring = gang_scoring
         self.re_expansion = re_expansion
+        self.fabric = fabric
+        # failure-aware recovery (ISSUE 7).  ``circuit_repair`` only acts
+        # on SwitchFail/LinkFail events — default traces contain none, so
+        # the default-on setting cannot perturb seed scheduling.  The
+        # checkpoint loss model and flap quarantine are off unless
+        # configured.
+        self.circuit_repair = circuit_repair
+        self.checkpoint_interval_s = checkpoint_interval_s
+        self.quarantine = quarantine
+        self._flaps: Optional[FlapTracker] = (
+            FlapTracker(quarantine) if quarantine is not None else None
+        )
+        self.failed_switches: Set[SwitchKey] = set()
+        self.failed_links: Set[LinkId] = set()
+        self._down_since: Dict[object, float] = {}   # entity -> fail time
 
         self.faults: Set[Coord] = set()
         self.running: Dict[int, RunningJob] = {}
@@ -171,7 +219,9 @@ class ClusterScheduler:
         self._circuit_cache = CircuitShapeCache(
             cfg, validate=validate_circuits, registry=self.registry
         )
-        self._goodput_cache = GoodputCache(cfg, registry=self.registry)
+        self._goodput_cache = GoodputCache(
+            cfg, registry=self.registry, fabric=fabric
+        )
         # keep mid-run summaries honest: summary()/policy_summary() pull the
         # live cache counters instead of whatever the last run() left behind
         self.metrics._sync_hook = self._sync_cache_stats
@@ -357,7 +407,16 @@ class ClusterScheduler:
             remove = cur & frozenset(dead)
             if not remove:
                 continue
-            if lazy:
+            if key in self.failed_switches:
+                # the switch is physically dead: its circuits are already
+                # gone, so releasing them is free (no mirror stroke) and
+                # orphaning them would be fiction
+                left_circuits = cur - remove
+                if left_circuits:
+                    self.circuits[key] = left_circuits
+                elif self.circuits.pop(key, None) is not None:
+                    self._line_sub(key)
+            elif lazy:
                 # leave the circuits programmed (no mirror strokes now);
                 # track them as orphans for later reuse or eviction
                 self._orphans.setdefault(key, set()).update(remove)
@@ -460,16 +519,34 @@ class ClusterScheduler:
                 target = self._circuit_cache.target_for(jmap.mapping, alloc)
         else:
             target = self._circuit_cache.target_for(jmap.mapping, alloc)
+        factor = 1.0
+        if self.circuit_repair and (self.failed_switches or self.failed_links):
+            # a fresh placement must not program circuits onto dead
+            # hardware: re-synthesize over the surviving rails (the
+            # rectangle the policy chose is kept; an irreparable fault
+            # set fails the attempt and the job backlogs)
+            if faults_hit_target(
+                target, self.failed_switches, self.failed_links
+            ):
+                res = synthesize_degraded(
+                    self.cfg, jmap.mapping, alloc,
+                    frozenset(self.failed_switches),
+                    frozenset(self.failed_links),
+                )
+                if res is None:
+                    return False
+                target, factor = res
         _, downtime = self._install(target)
         if self.goodput_model == "flow":
             if trc.enabled:
                 with trc.span("goodput.estimate", cat="flow", job=job.job_id) as gsp:
-                    g = self._goodput_cache.goodput_for(job, jmap.mapping, alloc)
-                    gsp.set(goodput=g)
+                    base_g = self._goodput_cache.goodput_for(job, jmap.mapping, alloc)
+                    gsp.set(goodput=base_g)
             else:
-                g = self._goodput_cache.goodput_for(job, jmap.mapping, alloc)
+                base_g = self._goodput_cache.goodput_for(job, jmap.mapping, alloc)
         else:
-            g = 1.0
+            base_g = 1.0
+        g = base_g * factor
         work = job.service_s if remaining_work_s is None else remaining_work_s
         finish = t + downtime + work / g
         epoch = self._segment.get(job.job_id, 0) + 1
@@ -481,6 +558,7 @@ class ClusterScheduler:
             job=job, jmap=jmap, alloc=alloc, circuits=target,
             goodput=g, remaining_work_s=work, resumed_t=t + downtime,
             expected_finish=finish, epoch=epoch,
+            base_goodput=base_g, degradation=factor,
         )
         rec = self.metrics.records[job.job_id]
         if rec.start_t is None:
@@ -702,15 +780,41 @@ class ClusterScheduler:
             return dataclasses.replace(plan, cp=plan.cp // 2)
         return None
 
-    def _evict(self, rj: RunningJob, t: float) -> float:
-        """Tear the job off the fabric; returns remaining work seconds."""
-        elapsed = max(0.0, t - rj.resumed_t)
-        remaining = max(0.0, rj.remaining_work_s - elapsed * rj.goodput)
-        # close out the run segment with the work it actually executed, so
-        # goodput means are work-weighted instead of last-segment-only
+    def _close_segment(self, rj: RunningJob, executed: float) -> None:
+        """Record a finished run segment (goodput means stay work-weighted)
+        and, for degraded segments, feed the goodput-under-failure ratio."""
         self.metrics.records[rj.job.job_id].end_segment(
-            rj.goodput, rj.alloc.size, rj.remaining_work_s - remaining
+            rj.goodput, rj.alloc.size, executed
         )
+        if rj.degradation < 1.0:
+            self.metrics.degraded_work_s += executed
+            self.metrics.degraded_factor_work_s += rj.degradation * executed
+
+    def _evict(self, rj: RunningJob, t: float, lossy: bool = False) -> float:
+        """Tear the job off the fabric; returns remaining work seconds.
+
+        ``lossy`` applies the checkpoint-interval loss model to
+        failure-driven evictions: only work up to the last completed
+        checkpoint (every ``checkpoint_interval_s`` of segment wall time)
+        survives; the rest is rolled back and charged to ``lost_work_s``.
+        Voluntary evictions (preemption, expansion) checkpoint on demand
+        and stay lossless, as does everything when the model is off
+        (``checkpoint_interval_s=None``, the default — seed behavior
+        credits all elapsed work)."""
+        elapsed = max(0.0, t - rj.resumed_t)
+        executed = min(rj.remaining_work_s, elapsed * rj.goodput)
+        kept = executed
+        interval = self.checkpoint_interval_s
+        if lossy and interval is not None and interval > 0:
+            kept = min(
+                executed, math.floor(elapsed / interval) * interval * rj.goodput
+            )
+            lost = executed - kept
+            if lost > 0:
+                self.metrics.lost_work_s += lost
+                self.metrics.records[rj.job.job_id].lost_work_s += lost
+        remaining = rj.remaining_work_s - kept
+        self._close_segment(rj, kept)
         self._uninstall(rj.circuits)
         self._occ.release(rj.alloc.rows, rj.alloc.cols)
         self._occupied_count -= rj.alloc.size
@@ -719,6 +823,11 @@ class ClusterScheduler:
         return remaining
 
     def _handle_node_fail(self, ev: NodeFail) -> None:
+        if ev.node not in self.faults:
+            self.metrics.node_faults += 1
+            self._down_since.setdefault(("node", ev.node), ev.time)
+            if self._flaps is not None:
+                self._flaps.record_fail(("node", ev.node))
         self.faults.add(ev.node)
         self._occ.fault(ev.node)
         self._occ_dirty = True                 # healthy count changed
@@ -729,14 +838,19 @@ class ClusterScheduler:
                 break
         if victim is None:
             return
-        job = victim.job
-        remaining = self._evict(victim, ev.time)
+        remaining = self._evict(victim, ev.time, lossy=True)
+        self._recover_ladder(victim.job, remaining, ev.time)
+
+    def _recover_ladder(self, job: JobSpec, remaining: float, t: float) -> None:
+        """Migrate -> shrink -> requeue for an already-evicted job (the
+        shared tail of the recovery ladder; node faults enter here
+        directly, switch/link faults only after in-place repair failed)."""
         rec = self.metrics.records[job.job_id]
 
         # 1) migrate at full size
-        if self._try_place(job, ev.time, remaining_work_s=remaining):
+        if self._try_place(job, t, remaining_work_s=remaining):
             rec.migrations += 1
-            self._drain_backlog(ev.time)  # eviction may have freed capacity
+            self._drain_backlog(t)        # eviction may have freed capacity
             return
         # 2) elastic shrink until the footprint fits (and >= min_nodes)
         plan = job.plan
@@ -752,13 +866,13 @@ class ClusterScheduler:
             # stretch by the full lost ratio, not just this halving step
             stretch = (job.plan.dp * job.plan.cp) / (plan2.dp * plan2.cp)
             if self._try_place(
-                shrunk, ev.time, jmap=jmap,
+                shrunk, t, jmap=jmap,
                 remaining_work_s=remaining * stretch,
             ):
                 self._jmap_cache[job.job_id] = jmap
                 rec.shrinks += 1
                 rec.job = shrunk
-                self._drain_backlog(ev.time)  # shrink freed part of the rect
+                self._drain_backlog(t)    # shrink freed part of the rect
                 return
             plan = plan2
         # 3) requeue with remaining work; the eviction freed the rest of the
@@ -768,7 +882,245 @@ class ClusterScheduler:
         requeued = dataclasses.replace(job, service_s=remaining)
         self.backlog.push_front(requeued)
         self._backlog_seen[job.job_id] = self._occ.version
-        self._drain_backlog(ev.time)
+        self._drain_backlog(t)
+
+    # -- switch / link faults (circuit repair before the ladder) ------------
+
+    def _repatch(self, rj: RunningJob, new_target: CircuitMap) -> float:
+        """Swap a running job's circuits in place, touching only what
+        changed: per switch key, release circuits the new target drops
+        (free on dead switches — the hardware already dropped them) and
+        program the additions.  Surviving rails keep their circuits and
+        cost zero strokes, which is why in-place repair beats the
+        evict-and-replace path (``bench_chaos`` records the comparison).
+        Downtime is the sum of both rounds."""
+        old = rj.circuits
+        removed: CircuitMap = {}
+        added: CircuitMap = {}
+        for key in sorted(old.keys() | new_target.keys()):
+            before = old.get(key, frozenset())
+            after = new_target.get(key, frozenset())
+            if before - after:
+                removed[key] = before - after
+            if after - before:
+                added[key] = after - before
+        _, dt1 = self._uninstall(removed)
+        _, dt2 = self._install(added)
+        rj.circuits = new_target
+        return dt1 + dt2
+
+    def _retime(self, rj: RunningJob, t: float, downtime: float, factor: float) -> None:
+        """Re-time a repaired job: close the current segment with the work
+        it executed, then continue the remainder at ``base_goodput *
+        factor`` after the patch downtime.  The epoch bump retires the
+        previously-scheduled finish (stale finishes are discarded)."""
+        elapsed = max(0.0, t - rj.resumed_t)
+        executed = min(rj.remaining_work_s, elapsed * rj.goodput)
+        self._close_segment(rj, executed)
+        rj.remaining_work_s -= executed
+        g = rj.base_goodput * factor
+        rj.goodput = g
+        rj.degradation = factor
+        rj.resumed_t = t + downtime
+        epoch = self._segment.get(rj.job.job_id, 0) + 1
+        self._segment[rj.job.job_id] = epoch
+        rj.epoch = epoch
+        rj.expected_finish = t + downtime + rj.remaining_work_s / g
+        rec = self.metrics.records[rj.job.job_id]
+        rec.goodput = g
+        rec.reconfig_downtime_s += downtime
+        self._queue.push(
+            JobFinish(time=rj.expected_finish, job_id=rj.job.job_id, epoch=epoch)
+        )
+
+    def _repair_or_ladder(self, rj: RunningJob, t: float) -> None:
+        """First rung of the fault response for a job whose circuits hit a
+        dead switch/transceiver: re-synthesize over the surviving rails in
+        place (``faults.synthesize_degraded``); only when the fault set is
+        irreparable for this job does it pay an eviction and enter the
+        migrate -> shrink -> requeue ladder."""
+        rec = self.metrics.records[rj.job.job_id]
+        if self.circuit_repair:
+            res = synthesize_degraded(
+                self.cfg, rj.jmap.mapping, rj.alloc,
+                frozenset(self.failed_switches),
+                frozenset(self.failed_links),
+            )
+            if res is not None:
+                new_target, factor = res
+                if self.validate_circuits:
+                    _check_port_discipline(self.cfg, new_target)
+                trc = self.tracer
+                if trc.enabled:
+                    with trc.span(
+                        "fault.repair", cat="fault",
+                        job=rj.job.job_id, factor=factor,
+                    ) as sp:
+                        downtime = self._repatch(rj, new_target)
+                        sp.set(downtime_s=downtime)
+                else:
+                    downtime = self._repatch(rj, new_target)
+                self._retime(rj, t, downtime, factor)
+                self.metrics.repairs += 1
+                rec.repairs += 1
+                return
+        self.metrics.repair_fallbacks += 1
+        remaining = self._evict(rj, t, lossy=True)
+        self._recover_ladder(rj.job, remaining, t)
+
+    def _heal_running(self, t: float) -> None:
+        """After a switch/link restore, re-synthesize every degraded job
+        over the (smaller) surviving fault set: healed rails are
+        reprogrammed and goodput steps back toward fault-free."""
+        if not self.circuit_repair:
+            return
+        for jid in sorted(self.running):
+            rj = self.running[jid]
+            if rj.degradation >= 1.0:
+                continue
+            res = synthesize_degraded(
+                self.cfg, rj.jmap.mapping, rj.alloc,
+                frozenset(self.failed_switches),
+                frozenset(self.failed_links),
+            )
+            if res is None:
+                continue
+            new_target, factor = res
+            if new_target == rj.circuits and factor == rj.degradation:
+                continue
+            trc = self.tracer
+            if trc.enabled:
+                with trc.span(
+                    "fault.restore", cat="fault", job=jid, factor=factor
+                ) as sp:
+                    downtime = self._repatch(rj, new_target)
+                    sp.set(downtime_s=downtime)
+            else:
+                downtime = self._repatch(rj, new_target)
+            self._retime(rj, t, downtime, factor)
+            self.metrics.repairs += 1
+            self.metrics.records[jid].repairs += 1
+
+    def _handle_switch_fail(self, ev: SwitchFail) -> None:
+        key = ev.switch
+        if key in self.failed_switches:
+            return
+        self.failed_switches.add(key)
+        self.metrics.switch_faults += 1
+        self._down_since.setdefault(("switch", key), ev.time)
+        if self._flaps is not None:
+            self._flaps.record_fail(("switch", key))
+        # placement outcomes now depend on the fault set, so backlogged
+        # jobs must be re-scanned even though the free set is unchanged
+        self._occ.touch()
+        # orphan circuits on the dead switch are gone with it (no strokes)
+        orph = self._orphans.pop(key, None)
+        if orph:
+            cur = self.circuits.get(key, frozenset()) - frozenset(orph)
+            if cur:
+                self.circuits[key] = cur
+            elif self.circuits.pop(key, None) is not None:
+                self._line_sub(key)
+        victims = sorted(
+            (rj for rj in self.running.values() if key in rj.circuits),
+            key=lambda rj: rj.job.job_id,
+        )
+        for rj in victims:
+            self._repair_or_ladder(rj, ev.time)
+
+    def _handle_link_fail(self, ev: LinkFail) -> None:
+        link = ev.link
+        if link in self.failed_links:
+            return
+        self.failed_links.add(link)
+        self.metrics.link_faults += 1
+        self._down_since.setdefault(("link", link), ev.time)
+        self._occ.touch()
+        victims = sorted(
+            (
+                rj for rj in self.running.values()
+                if link_hits_circuits(link, rj.circuits)
+            ),
+            key=lambda rj: rj.job.job_id,
+        )
+        for rj in victims:
+            self._repair_or_ladder(rj, ev.time)
+
+    def _record_restore(self, entity: object, t: float) -> None:
+        since = self._down_since.pop(entity, None)
+        if since is not None:
+            self.metrics.mttr_total_s += t - since
+            self.metrics.mttr_count += 1
+
+    def _restore_switch(self, key: SwitchKey, t: float) -> None:
+        self.failed_switches.discard(key)
+        self._record_restore(("switch", key), t)
+        self._occ.touch()
+        self._heal_running(t)
+        self._drain_backlog(t)
+
+    def _restore_link(self, link: LinkId, t: float) -> None:
+        self.failed_links.discard(link)
+        self._record_restore(("link", link), t)
+        self._occ.touch()
+        self._heal_running(t)
+        self._drain_backlog(t)
+
+    def _restore_node(self, node: Coord, t: float) -> None:
+        self.faults.discard(node)
+        self._occ.recover(node)
+        self._occ_dirty = True                 # healthy count changed
+        self._record_restore(("node", node), t)
+        self._drain_backlog(t)
+        self._maybe_expand(t)
+
+    def _handle_node_recover(self, ev: NodeRecover) -> None:
+        if ev.node in self.faults and self._flaps is not None:
+            q = self._flaps.quarantine_s(("node", ev.node))
+            if q is not None:
+                # flapping node: hold it out of service for the burn-in
+                self.metrics.quarantines += 1
+                self._queue.push(
+                    QuarantineRelease(
+                        time=ev.time + q, kind="node", node=ev.node
+                    )
+                )
+                return
+        self._restore_node(ev.node, ev.time)
+
+    def _handle_switch_recover(self, ev: SwitchRecover) -> None:
+        if ev.switch not in self.failed_switches:
+            return
+        if self._flaps is not None:
+            q = self._flaps.quarantine_s(("switch", ev.switch))
+            if q is not None:
+                self.metrics.quarantines += 1
+                self._queue.push(
+                    QuarantineRelease(
+                        time=ev.time + q, kind="switch", switch=ev.switch
+                    )
+                )
+                return
+        self._restore_switch(ev.switch, ev.time)
+
+    def _handle_link_recover(self, ev: LinkRecover) -> None:
+        if ev.link not in self.failed_links:
+            return
+        self._restore_link(ev.link, ev.time)
+
+    def _handle_quarantine_release(self, ev: QuarantineRelease) -> None:
+        """A completed burn-in: the flap record resets and the entity
+        rejoins service through the normal restore path."""
+        if ev.kind == "node" and ev.node is not None:
+            if self._flaps is not None:
+                self._flaps.release(("node", ev.node))
+            if ev.node in self.faults:
+                self._restore_node(ev.node, ev.time)
+        elif ev.kind == "switch" and ev.switch is not None:
+            if self._flaps is not None:
+                self._flaps.release(("switch", ev.switch))
+            if ev.switch in self.failed_switches:
+                self._restore_switch(ev.switch, ev.time)
 
     # -- event loop ---------------------------------------------------------
 
@@ -789,7 +1141,7 @@ class ClusterScheduler:
             if rj is None or ev.epoch != rj.epoch:
                 return  # stale finish from a superseded run segment
             rec = self.metrics.records[ev.job_id]
-            rec.end_segment(rj.goodput, rj.alloc.size, rj.remaining_work_s)
+            self._close_segment(rj, rj.remaining_work_s)
             self._uninstall(rj.circuits)
             self._occ.release(rj.alloc.rows, rj.alloc.cols)
             self._occupied_count -= rj.alloc.size
@@ -801,11 +1153,17 @@ class ClusterScheduler:
         elif isinstance(ev, NodeFail):
             self._handle_node_fail(ev)
         elif isinstance(ev, NodeRecover):
-            self.faults.discard(ev.node)
-            self._occ.recover(ev.node)
-            self._occ_dirty = True             # healthy count changed
-            self._drain_backlog(ev.time)
-            self._maybe_expand(ev.time)
+            self._handle_node_recover(ev)
+        elif isinstance(ev, SwitchFail):
+            self._handle_switch_fail(ev)
+        elif isinstance(ev, SwitchRecover):
+            self._handle_switch_recover(ev)
+        elif isinstance(ev, LinkFail):
+            self._handle_link_fail(ev)
+        elif isinstance(ev, LinkRecover):
+            self._handle_link_recover(ev)
+        elif isinstance(ev, QuarantineRelease):
+            self._handle_quarantine_release(ev)
         else:  # pragma: no cover
             raise TypeError(f"unknown event {ev!r}")
 

@@ -23,7 +23,17 @@ import random
 from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 from ..core.mapping import ParallelismPlan
-from .events import Event, JobSubmit, NodeFail, NodeRecover
+from .events import (
+    Event,
+    JobSubmit,
+    LinkFail,
+    LinkRecover,
+    NodeFail,
+    NodeRecover,
+    SwitchFail,
+    SwitchRecover,
+)
+from .faults import FaultDomain
 from .jobs import JobSpec, default_plan, make_job
 
 DEFAULT_MIX: Tuple[str, ...] = (
@@ -96,6 +106,7 @@ def iter_failure_trace(
     duration_s: float = 4 * 3600.0,
     mtbf_node_s: float = 1e7,
     mttr_s: float = 1800.0,
+    emit_horizon_recoveries: bool = False,
 ) -> Iterator[Event]:
     """Node failures over an n x n grid (lazy): cluster-level failure
     rate is n^2 / mtbf_node_s; each failure schedules its recovery after
@@ -107,6 +118,13 @@ def iter_failure_trace(
     coords).  The rng draw order and the row-major candidate indexing
     match :func:`_iter_failure_trace_ref` exactly, so the event sequence
     is identical (asserted in ``tests/test_policy.py``).
+
+    ``emit_horizon_recoveries`` also yields ``NodeRecover`` events whose
+    repair lands past ``duration_s``: the seed behavior dropped them, so
+    a node failing near the horizon stays down forever in any run
+    extended past the trace window.  Off by default — the default event
+    sequence (and every seeded fingerprint built on it) is unchanged; the
+    rng draw order is identical in both modes.
     """
     rng = random.Random(seed ^ 0x5DEECE66D)
     t = 0.0
@@ -130,7 +148,7 @@ def iter_failure_trace(
         yield NodeFail(time=t, node=node)
         repair = t + max(60.0, rng.expovariate(1.0 / mttr_s))
         heapq.heappush(repairs, (repair, nid))
-        if repair < duration_s:
+        if repair < duration_s or emit_horizon_recoveries:
             yield NodeRecover(time=repair, node=node)
 
 
@@ -141,6 +159,7 @@ def _iter_failure_trace_ref(
     duration_s: float = 4 * 3600.0,
     mtbf_node_s: float = 1e7,
     mttr_s: float = 1800.0,
+    emit_horizon_recoveries: bool = False,
 ) -> Iterator[Event]:
     """Seed implementation of :func:`iter_failure_trace` rebuilding the
     candidate list per event — kept as the equivalence-test oracle."""
@@ -163,13 +182,158 @@ def _iter_failure_trace_ref(
         yield NodeFail(time=t, node=node)
         repair = t + max(60.0, rng.expovariate(1.0 / mttr_s))
         down[node] = repair
-        if repair < duration_s:
+        if repair < duration_s or emit_horizon_recoveries:
             yield NodeRecover(time=repair, node=node)
 
 
 def failure_trace(**kwargs) -> List[Event]:
     """Materialized ``iter_failure_trace`` (same arguments and events)."""
     return list(iter_failure_trace(**kwargs))
+
+
+def iter_fault_domain_trace(
+    *,
+    n: int,
+    rails: int = 16,
+    seed: int = 0,
+    duration_s: float = 4 * 3600.0,
+    mtbf_node_s: float = 1e7,
+    mttr_node_s: float = 1800.0,
+    mtbf_switch_s: float = 0.0,
+    mttr_switch_s: float = 3600.0,
+    mtbf_link_s: float = 0.0,
+    mttr_link_s: float = 900.0,
+    mtbf_row_power_s: float = 0.0,
+    mttr_row_power_s: float = 7200.0,
+    row_group_rows: int = 4,
+    emit_horizon_recoveries: bool = True,
+) -> Iterator[Event]:
+    """Correlated fault-domain failures over an n x n grid with ``rails``
+    rails per physical dimension (lazy; see ``faults.FaultDomain``).
+
+    Four competing exponential processes, each an MTBF per *entity* (a
+    zero MTBF disables the domain):
+
+    * **node** — n^2 entities, one ``NodeFail``/``NodeRecover`` pair;
+    * **switch** — ``2 * n * rails`` OCS units keyed ``(dim, group,
+      rail)``, one ``SwitchFail``/``SwitchRecover`` pair;
+    * **link** — ``2 * n^2 * rails`` transceivers, one
+      ``LinkFail``/``LinkRecover`` pair;
+    * **row_power** — ``ceil(n / row_group_rows)`` rack feeds; a failure
+      emits a simultaneous ``NodeFail`` for every up node in its row
+      block and one shared recovery instant for exactly those nodes
+      (individually-failed nodes keep their own repair schedule).
+
+    Failed entities leave their domain's candidate set until repaired,
+    so the generator never double-fails a down entity.  All randomness
+    flows through one ``random.Random(seed)``: the event sequence is a
+    pure function of the arguments (replay-determinism is one of the
+    ``bench_chaos`` invariants).  Unlike the node-only generator,
+    horizon-crossing recoveries are emitted by default — correlated
+    scenarios are usually run past the injection window to watch the
+    cluster heal.
+    """
+    domains = [
+        FaultDomain("node", n * n, mtbf_node_s, mttr_node_s),
+        FaultDomain("switch", 2 * n * rails, mtbf_switch_s, mttr_switch_s),
+        FaultDomain("link", 2 * n * n * rails, mtbf_link_s, mttr_link_s),
+        FaultDomain(
+            "row_power",
+            -(-n // row_group_rows),
+            mtbf_row_power_s,
+            mttr_row_power_s,
+        ),
+    ]
+    total_rate = sum(d.rate for d in domains)
+    if total_rate <= 0:
+        return
+    rng = random.Random(seed ^ 0x5DEECE66D)
+    # sorted up-entity id lists per domain (row_power groups double as ids)
+    up: Dict[str, List[int]] = {
+        "node": list(range(n * n)),
+        "switch": list(range(2 * n * rails)),
+        "link": list(range(2 * n * n * rails)),
+        "row_power": list(range(-(-n // row_group_rows))),
+    }
+    # repair heap: (time, seq, kind, entity id, downed-node ids for groups)
+    repairs: List[Tuple[float, int, str, int, Tuple[int, ...]]] = []
+    seq = 0
+
+    def node_coord(nid: int) -> Tuple[int, int]:
+        return (nid // n, nid % n)
+
+    def switch_key(sid: int) -> Tuple[str, int, int]:
+        dim_i, rest = divmod(sid, n * rails)
+        group, rail = divmod(rest, rails)
+        return ("X" if dim_i == 0 else "Y", group, rail)
+
+    def link_id(lid: int) -> Tuple[Tuple[int, int], str, int]:
+        rest, rail = divmod(lid, rails)
+        nid, dim_i = divmod(rest, 2)
+        return (node_coord(nid), "X" if dim_i == 0 else "Y", rail)
+
+    t = 0.0
+    while True:
+        t += rng.expovariate(total_rate)
+        if t >= duration_s:
+            break
+        while repairs and repairs[0][0] <= t:
+            rt, _, kind, eid, downed = heapq.heappop(repairs)
+            bisect.insort(up[kind], eid)
+            if kind == "row_power":
+                for nid in downed:
+                    bisect.insort(up["node"], nid)
+        u = rng.random() * total_rate
+        acc = 0.0
+        dom = domains[-1]
+        for d in domains:
+            acc += d.rate
+            if u < acc:
+                dom = d
+                break
+        cand = up[dom.kind]
+        if not cand:
+            continue
+        eid = cand.pop(rng.randrange(len(cand)))
+        repair = t + max(60.0, rng.expovariate(1.0 / dom.mttr_s))
+        emit_recover = repair < duration_s or emit_horizon_recoveries
+        downed: Tuple[int, ...] = ()
+        if dom.kind == "node":
+            node = node_coord(eid)
+            yield NodeFail(time=t, node=node)
+            if emit_recover:
+                yield NodeRecover(time=repair, node=node)
+        elif dom.kind == "switch":
+            key = switch_key(eid)
+            yield SwitchFail(time=t, switch=key)
+            if emit_recover:
+                yield SwitchRecover(time=repair, switch=key)
+        elif dom.kind == "link":
+            node, dim, rail = link_id(eid)
+            yield LinkFail(time=t, node=node, dim=dim, rail=rail)
+            if emit_recover:
+                yield LinkRecover(time=repair, node=node, dim=dim, rail=rail)
+        else:  # row_power: down every currently-up node in the row block
+            r_lo = eid * row_group_rows
+            r_hi = min(n, r_lo + row_group_rows)
+            hit = [
+                nid for nid in up["node"]
+                if r_lo <= nid // n < r_hi
+            ]
+            for nid in hit:
+                up["node"].remove(nid)
+                yield NodeFail(time=t, node=node_coord(nid))
+            if emit_recover:
+                for nid in hit:
+                    yield NodeRecover(time=repair, node=node_coord(nid))
+            downed = tuple(hit)
+        heapq.heappush(repairs, (repair, seq, dom.kind, eid, downed))
+        seq += 1
+
+
+def fault_domain_trace(**kwargs) -> List[Event]:
+    """Materialized ``iter_fault_domain_trace`` (same arguments/events)."""
+    return list(iter_fault_domain_trace(**kwargs))
 
 
 def fig20_trace(

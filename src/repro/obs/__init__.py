@@ -59,7 +59,7 @@ compares fidelity values byte-for-byte and enforces wall-time bands.
 """
 
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
-from .schema import validate_trace
+from .schema import KNOWN_SPANS, known_span_names, validate_trace
 from .tracer import (
     NULL_TRACER,
     NullTracer,
@@ -80,5 +80,7 @@ __all__ = [
     "get_tracer",
     "set_tracer",
     "tracing",
+    "KNOWN_SPANS",
+    "known_span_names",
     "validate_trace",
 ]

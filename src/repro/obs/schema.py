@@ -15,6 +15,53 @@ from typing import Dict, Iterable, List, Mapping, Tuple, Union
 _PHASES = {"B", "E", "i", "I", "C", "M", "X"}
 _REQUIRED = ("name", "ph", "pid", "tid")
 
+# Catalog of span names the repo's instrumentation points emit, by layer.
+# Purely documentary for validate_trace (unknown names are not an error —
+# callers may add ad-hoc spans), but ``known_span_names()`` lets tools
+# and tests enumerate what a fully-traced run can contain, and
+# ``tests/test_obs.py`` checks every name emitted by an instrumented
+# scheduler run appears here (so new instrumentation updates the catalog).
+# ``event.*`` covers one span per scheduler event class (events.Event).
+KNOWN_SPANS: Dict[str, Tuple[str, ...]] = {
+    "scheduler": (
+        "event.JobSubmit",
+        "event.JobFinish",
+        "event.NodeFail",
+        "event.NodeRecover",
+        "event.SwitchFail",
+        "event.SwitchRecover",
+        "event.LinkFail",
+        "event.LinkRecover",
+        "event.QuarantineRelease",
+        "placement.attempt",
+        "backlog.drain",
+        "preempt.select",
+    ),
+    "ocs": (
+        "ocs.apply",
+        "ocs.revert",
+        "ocs.synthesize",
+    ),
+    "fault": (
+        "fault.repair",          # in-place degraded re-synthesis succeeded
+        "fault.restore",         # healed rails reprogrammed after a recover
+    ),
+    "flow": (
+        "goodput.estimate",
+        "flow.csr_assemble",
+        "flow.bfs",
+        "flow.alltoall_counts",
+        "flow.route",
+        "flow.symmetry_sweep",
+        "flow.orbit_gather",
+    ),
+}
+
+
+def known_span_names() -> frozenset:
+    """Every span name in :data:`KNOWN_SPANS`, flattened."""
+    return frozenset(n for names in KNOWN_SPANS.values() for n in names)
+
 
 def validate_trace(
     trace: Union[Mapping, Iterable[Mapping]],

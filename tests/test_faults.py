@@ -1,0 +1,584 @@
+"""ISSUE 7: fault domains, failure-aware circuit repair, chaos machinery.
+
+The load-bearing guarantees:
+
+* ``OccupancyIndex.fault``/``recover`` round-trip exactly: recovering
+  every faulted cell restores the free set and free count bit for bit,
+  whatever occupancy it interleaved with (property test);
+* a ``NodeFail`` on an idle node changes *capacity only* — every other
+  piece of scheduler state (running jobs, circuits, backlog, job
+  records) is byte-identical to not having dispatched it;
+* ``iter_failure_trace``'s ``emit_horizon_recoveries`` flag preserves
+  seed parity: the default event sequence is unchanged, the flagged one
+  adds exactly the horizon-crossing recoveries (both modes drawing the
+  identical rng stream);
+* ``synthesize_degraded`` equals ``job_target_circuits`` with factor 1.0
+  when nothing is failed, and routes around dead switches with bounded
+  degradation otherwise; pattern reassignment keeps Lemma-3.1 coverage
+  while reprogramming the minimum number of rails;
+* the scheduler's repair rung: a switch fault repairs in place (goodput
+  scaled by the surviving-rail fraction), the recover heals back to
+  fault-free, MTTR is accounted, and the whole response is deterministic;
+* the checkpoint-interval loss model and the flap-quarantine backoff
+  behave per spec and are inert at their defaults;
+* node-only traces schedule byte-identically whatever the new knobs do
+  (the default-path fidelity contract);
+* ``iter_fault_domain_trace`` replays deterministically, never
+  double-fails a down entity, and row-power failures down a whole row
+  block at one timestamp with one shared recovery.
+"""
+
+import dataclasses
+import json
+import random
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cluster import (
+    ClusterScheduler,
+    FlapTracker,
+    JobSubmit,
+    LinkFail,
+    LinkRecover,
+    NodeFail,
+    NodeRecover,
+    QuarantineConfig,
+    SwitchFail,
+    SwitchRecover,
+    iter_failure_trace,
+    iter_fault_domain_trace,
+    job_target_circuits,
+    link_hits_circuits,
+    make_job,
+    plan_job_mapping,
+    poisson_trace,
+    synthesize_degraded,
+)
+from repro.cluster.faults import _stable_pattern_assignment, link_switch_key
+from repro.cluster.occupancy import OccupancyIndex
+from repro.cluster.trace import _iter_failure_trace_ref, failure_trace
+from repro.core.availability import JobAllocation
+from repro.core.topology import RailXConfig
+
+CFG = RailXConfig(m=4, n=4, R=32)   # 16x16 node grid, r=16 rails
+SIDE = 16
+
+
+def _sched(**kw):
+    kw.setdefault("goodput_model", "none")
+    kw.setdefault("validate_circuits", False)
+    return ClusterScheduler(CFG, n=SIDE, policy="best_fit", **kw)
+
+
+def _submit(sched, jid=0, t=0.0, service_s=3600.0, **job_kw):
+    job = make_job(jid, "qwen3-8b", service_s=service_s, **job_kw)
+    sched.run([JobSubmit(time=t, job=job)], until=t)
+    return sched.running[jid]
+
+
+def _fingerprint(m, sched):
+    """Canonical dump of everything a run observed (determinism probe)."""
+    return json.dumps(
+        {
+            "summary": m.summary(),
+            "survivability": m.survivability_summary(),
+            "jobs": sorted(
+                (jid, rec.submit_t, rec.finish_t, rec.migrations,
+                 rec.shrinks, rec.repairs, round(rec.lost_work_s, 9),
+                 rec.segment_count)
+                for jid, rec in m.records.items()
+            ),
+            "backlog": [j.job_id for j in sched.backlog],
+        },
+        sort_keys=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# OccupancyIndex fault/recover round trip (satellite 4)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=10),
+    rects=st.lists(
+        st.tuples(
+            st.integers(min_value=0, max_value=9),
+            st.integers(min_value=0, max_value=9),
+            st.integers(min_value=0, max_value=9),
+            st.integers(min_value=0, max_value=9),
+        ),
+        max_size=3,
+    ),
+    picks=st.lists(st.integers(min_value=0, max_value=99), max_size=12),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+)
+def test_occupancy_fault_recover_roundtrip(n, rects, picks, seed):
+    rng = random.Random(seed)
+    idx = OccupancyIndex(n)
+    # arbitrary occupancy first: some rectangles, possibly overlapping
+    for r0, c0, r1, c1 in rects:
+        r0, c0, r1, c1 = r0 % n, c0 % n, r1 % n, c1 % n
+        idx.occupy(range(min(r0, r1), max(r0, r1) + 1),
+                   range(min(c0, c1), max(c0, c1) + 1))
+    before_free = idx.free_set()
+    before_count = idx.free_count
+    before_version = idx.version
+
+    faulted = list({(p // n % n, p % n) for p in picks})
+    faulted.sort()
+    for node in faulted:
+        idx.fault(node)
+        if rng.random() < 0.5:
+            idx.fault(node)       # double-fault must be idempotent
+    # recover in shuffled order, plus spurious recovers of healthy cells
+    order = list(faulted)
+    rng.shuffle(order)
+    for node in order:
+        idx.recover(node)
+    for _ in range(rng.randrange(4)):
+        idx.recover((rng.randrange(n), rng.randrange(n)))
+
+    assert idx.free_set() == before_free
+    assert idx.free_count == before_count
+    assert idx.version >= before_version
+
+
+# ---------------------------------------------------------------------------
+# Idle-node fault == capacity-only change (satellite 4)
+# ---------------------------------------------------------------------------
+
+
+def test_idle_node_fail_changes_capacity_only():
+    sched = _sched()
+    rj = _submit(sched, jid=0)
+    idle = next(iter(sorted(sched.free_nodes())))
+    assert idle[0] not in rj.alloc.rows or idle[1] not in rj.alloc.cols
+
+    before = {
+        "running": {
+            jid: (r.alloc, r.remaining_work_s, r.goodput, r.epoch,
+                  r.circuits)
+            for jid, r in sched.running.items()
+        },
+        "circuits": dict(sched.circuits),
+        "backlog": list(sched.backlog),
+        "free_count": sched._occ.free_count,
+        "records": {
+            jid: dataclasses.replace(rec) for jid, rec in
+            sched.metrics.records.items()
+        },
+    }
+    sched.run([NodeFail(time=10.0, node=idle)], until=10.0)
+
+    assert idle in sched.faults
+    assert sched._occ.free_count == before["free_count"] - 1
+    assert not sched._occ.is_free(idle)
+    # everything that is not capacity is untouched
+    assert {
+        jid: (r.alloc, r.remaining_work_s, r.goodput, r.epoch, r.circuits)
+        for jid, r in sched.running.items()
+    } == before["running"]
+    assert sched.circuits == before["circuits"]
+    assert list(sched.backlog) == before["backlog"]
+    for jid, rec in sched.metrics.records.items():
+        ref = before["records"][jid]
+        assert (rec.migrations, rec.shrinks, rec.repairs, rec.preemptions,
+                rec.lost_work_s, rec.segment_count) == (
+            ref.migrations, ref.shrinks, ref.repairs, ref.preemptions,
+            ref.lost_work_s, ref.segment_count)
+    assert sched.metrics.node_faults == 1
+    # the recover restores capacity exactly
+    sched.run([NodeRecover(time=20.0, node=idle)], until=20.0)
+    assert sched._occ.free_count == before["free_count"]
+    assert idle not in sched.faults
+
+
+# ---------------------------------------------------------------------------
+# Horizon-recovery flag (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+def test_failure_trace_horizon_flag_preserves_seed_parity():
+    kw = dict(n=8, seed=3, duration_s=6000.0, mtbf_node_s=2e4, mttr_s=8e3)
+    default = list(iter_failure_trace(**kw))
+    explicit_off = list(
+        iter_failure_trace(emit_horizon_recoveries=False, **kw)
+    )
+    ref = list(_iter_failure_trace_ref(**kw))
+    assert default == explicit_off == ref
+
+    flagged = list(iter_failure_trace(emit_horizon_recoveries=True, **kw))
+    ref_flagged = list(
+        _iter_failure_trace_ref(emit_horizon_recoveries=True, **kw)
+    )
+    assert flagged == ref_flagged
+    # identical rng stream: dropping the horizon-crossing recoveries from
+    # the flagged sequence reproduces the default sequence exactly
+    trimmed = [
+        ev for ev in flagged
+        if not (isinstance(ev, NodeRecover) and ev.time >= kw["duration_s"])
+    ]
+    assert trimmed == default
+    # and in flagged mode every failure has its matching recovery
+    fails = [ev.node for ev in flagged if isinstance(ev, NodeFail)]
+    recovers = [ev.node for ev in flagged if isinstance(ev, NodeRecover)]
+    assert sorted(fails) == sorted(recovers)
+    assert len(flagged) > len(default)  # this seed crosses the horizon
+
+
+# ---------------------------------------------------------------------------
+# Degraded synthesis
+# ---------------------------------------------------------------------------
+
+
+def _job_ctx(jid=0):
+    job = make_job(jid, "qwen3-8b")
+    jmap = plan_job_mapping(CFG, job)
+    alloc = JobAllocation(
+        rows=tuple(range(jmap.rows_req)), cols=tuple(range(jmap.cols_req))
+    )
+    return job, jmap, alloc
+
+
+def test_synthesize_degraded_no_fault_parity():
+    _, jmap, alloc = _job_ctx()
+    res = synthesize_degraded(CFG, jmap.mapping, alloc)
+    assert res is not None
+    target, factor = res
+    assert factor == 1.0
+    assert target == job_target_circuits(CFG, jmap.mapping, alloc)
+
+
+def test_synthesize_degraded_avoids_dead_switch():
+    _, jmap, alloc = _job_ctx()
+    baseline = job_target_circuits(CFG, jmap.mapping, alloc)
+    dead = sorted(baseline)[0]
+    res = synthesize_degraded(
+        CFG, jmap.mapping, alloc, failed_switches=frozenset([dead])
+    )
+    assert res is not None
+    target, factor = res
+    assert dead not in target
+    assert 0.0 < factor < 1.0
+    # every surviving switch keeps a target entry — repair degrades
+    # bandwidth, it does not abandon live rails
+    assert all(k in target for k in baseline if k != dead)
+    # switches outside the dead switch's dimension group are untouched —
+    # that locality is what makes the in-place repair diff small
+    for k, v in baseline.items():
+        if k[:2] != dead[:2]:
+            assert target[k] == v
+
+
+def test_synthesize_degraded_avoids_dead_link():
+    _, jmap, alloc = _job_ctx()
+    baseline = job_target_circuits(CFG, jmap.mapping, alloc)
+    key = sorted(baseline)[0]
+    phys, group, rail = key
+    member = alloc.cols[0] if phys == "X" else alloc.rows[0]
+    node = (group, member) if phys == "X" else (member, group)
+    link = (node, phys, rail)
+    assert link_switch_key(link) == key
+    assert link_hits_circuits(link, baseline)
+    res = synthesize_degraded(
+        CFG, jmap.mapping, alloc, failed_links=frozenset([link])
+    )
+    assert res is not None
+    target, factor = res
+    assert not link_hits_circuits(link, target)
+    assert 0.0 < factor < 1.0
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    lo=st.integers(min_value=0, max_value=8),
+    total=st.integers(min_value=2, max_value=16),
+    pat_pick=st.integers(min_value=0, max_value=1000),
+    dead_picks=st.lists(st.integers(min_value=0, max_value=1000), max_size=16),
+)
+def test_stable_pattern_assignment_properties(lo, total, pat_pick, dead_picks):
+    patterns = 1 + pat_pick % total
+    rails = list(range(lo, lo + total))
+    dead = sorted({lo + p % total for p in dead_picks})[: total - patterns]
+    live = [r for r in rails if r not in dead]
+    assign = _stable_pattern_assignment(lo, live, patterns)
+    # total coverage: every pattern carried by >= 1 surviving rail
+    assert set(assign) == set(live)
+    assert set(assign.values()) == set(range(patterns))
+    # minimality: only rails drafted for a missing pattern moved
+    preferred = {r: (r - lo) % patterns for r in live}
+    missing = set(range(patterns)) - set(preferred.values())
+    moved = [r for r in live if assign[r] != preferred[r]]
+    assert len(moved) == len(missing)
+    # no faults => exactly the fault-free assignment
+    if not dead:
+        assert assign == preferred
+
+
+# ---------------------------------------------------------------------------
+# Scheduler repair / heal / MTTR
+# ---------------------------------------------------------------------------
+
+
+def test_switch_fail_repairs_in_place_and_heals():
+    sched = _sched(goodput_model="flow", validate_circuits=True)
+    rj = _submit(sched, jid=0, service_s=4 * 3600.0)
+    base_g = rj.goodput
+    alloc_before = rj.alloc
+    key = sorted(rj.circuits)[0]
+
+    sched.run([SwitchFail(time=100.0, switch=key)], until=100.0)
+    assert sched.metrics.repairs == 1
+    assert sched.metrics.repair_fallbacks == 0
+    assert rj is sched.running[0]          # kept its nodes: no migration
+    assert rj.alloc == alloc_before
+    assert key not in rj.circuits
+    assert 0.0 < rj.degradation < 1.0
+    assert abs(rj.goodput - rj.base_goodput * rj.degradation) < 1e-12
+    assert rj.goodput < base_g
+
+    sched.run([SwitchRecover(time=600.0, switch=key)], until=600.0)
+    assert sched.metrics.repairs == 2      # the heal is a repair too
+    assert rj.degradation == 1.0
+    assert abs(rj.goodput - base_g) < 1e-12
+    assert key in rj.circuits
+    sv = sched.metrics.survivability_summary()
+    assert sv["mean_mttr_s"] == 500.0
+    assert sv["switch_faults"] == 1
+    assert sv["degraded_work_s"] > 0.0
+    assert 0.0 < sv["goodput_under_failure_ratio"] < 1.0
+
+
+def test_link_fail_repairs_in_place():
+    sched = _sched(goodput_model="flow")
+    rj = _submit(sched, jid=0, service_s=4 * 3600.0)
+    key = sorted(rj.circuits)[0]
+    phys, group, rail = key
+    member = rj.alloc.cols[0] if phys == "X" else rj.alloc.rows[0]
+    node = (group, member) if phys == "X" else (member, group)
+    link = (node, phys, rail)
+    assert link_hits_circuits(link, rj.circuits)
+
+    sched.run([LinkFail(time=50.0, node=node, dim=phys, rail=rail)],
+              until=50.0)
+    assert sched.metrics.repairs == 1
+    assert not link_hits_circuits(link, rj.circuits)
+    assert rj.degradation < 1.0
+    sched.run([LinkRecover(time=250.0, node=node, dim=phys, rail=rail)],
+              until=250.0)
+    assert rj.degradation == 1.0
+    assert sched.metrics.survivability_summary()["link_faults"] == 1
+
+
+def test_repair_disabled_falls_back_to_ladder():
+    sched = _sched(circuit_repair=False)
+    rj = _submit(sched, jid=0)
+    key = sorted(rj.circuits)[0]
+    sched.run([SwitchFail(time=100.0, switch=key)], until=100.0)
+    assert sched.metrics.repairs == 0
+    assert sched.metrics.repair_fallbacks == 1
+    # the job survived through the ladder (migrated or requeued)
+    rec = sched.metrics.records[0]
+    assert rec.migrations == 1 or 0 in {j.job_id for j in sched.backlog}
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-interval loss model
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_loss_rolls_back_to_interval():
+    sched = _sched(checkpoint_interval_s=600.0)
+    rj = _submit(sched, jid=0)
+    inside = (rj.alloc.rows[0], rj.alloc.cols[0])
+    # the segment starts after the install downtime, so checkpoints tick
+    # from resumed_t; at goodput 1.0 the loss is elapsed mod 600
+    elapsed = 1500.0 - rj.resumed_t
+    want_lost = elapsed - (elapsed // 600.0) * 600.0
+    assert want_lost > 0.0
+    sched.run([NodeFail(time=1500.0, node=inside)], until=1500.0)
+    assert abs(sched.metrics.lost_work_s - want_lost) < 1e-9
+    assert abs(sched.metrics.records[0].lost_work_s - want_lost) < 1e-9
+
+
+def test_checkpoint_loss_off_by_default():
+    sched = _sched()
+    rj = _submit(sched, jid=0)
+    inside = (rj.alloc.rows[0], rj.alloc.cols[0])
+    sched.run([NodeFail(time=1500.0, node=inside)], until=1500.0)
+    assert sched.metrics.lost_work_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Flap quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_flap_tracker_backoff():
+    ft = FlapTracker(QuarantineConfig(threshold=2, base_s=100.0, factor=2.0))
+    e = ("node", (0, 0))
+    assert ft.quarantine_s(e) is None
+    ft.record_fail(e)
+    assert ft.quarantine_s(e) is None
+    ft.record_fail(e)
+    assert ft.quarantine_s(e) == 100.0
+    ft.record_fail(e)
+    assert ft.quarantine_s(e) == 200.0
+    ft.release(e)
+    assert ft.fail_count(e) == 0
+    assert ft.quarantine_s(e) is None
+
+
+def test_flapping_node_quarantined_then_released():
+    sched = _sched(
+        quarantine=QuarantineConfig(threshold=1, base_s=500.0, factor=2.0)
+    )
+    node = (0, 0)
+    free0 = sched._occ.free_count
+    # threshold=1: the very first repair owes a 500 s burn-in
+    sched.run([NodeFail(time=0.0, node=node)], until=0.0)
+    sched.run([NodeRecover(time=100.0, node=node)], until=100.0)
+    assert node in sched.faults            # held down past its repair
+    assert sched.metrics.quarantines == 1
+    assert sched._occ.free_count == free0 - 1
+    # the QuarantineRelease at t=600 restores it and resets the record
+    sched.run(until=600.0)
+    assert node not in sched.faults
+    assert sched._occ.free_count == free0
+    assert sched._flaps.fail_count(("node", node)) == 0
+
+
+def test_quarantine_off_by_default():
+    sched = _sched()
+    node = (0, 0)
+    sched.run([NodeFail(time=0.0, node=node)], until=0.0)
+    sched.run([NodeRecover(time=100.0, node=node)], until=100.0)
+    assert node not in sched.faults        # seed behavior: instant return
+
+
+# ---------------------------------------------------------------------------
+# Default-path fidelity: node-only traces are invariant to the new knobs
+# ---------------------------------------------------------------------------
+
+
+def test_node_only_trace_invariant_to_repair_knob():
+    events = poisson_trace(
+        seed=11, duration_s=8 * 3600.0, arrival_rate_per_h=18.0,
+        mean_service_s=3600.0,
+    ) + failure_trace(
+        n=SIDE, seed=11, duration_s=8 * 3600.0,
+        mtbf_node_s=3e5, mttr_s=1800.0,
+    )
+    fps = []
+    for kw in (
+        dict(),                              # new defaults
+        dict(circuit_repair=False),          # repair rung disabled
+    ):
+        sched = _sched(goodput_model="flow", **kw)
+        m = sched.run(sorted(events, key=lambda e: e.time))
+        fps.append(_fingerprint(m, sched))
+    assert fps[0] == fps[1]
+    # the survivability figures stay out of the seed summary() key set
+    s = ClusterScheduler(CFG, n=SIDE).metrics.summary()
+    for k in ("repairs", "lost_work_s", "mean_mttr_s", "quarantines"):
+        assert k not in s
+
+
+# ---------------------------------------------------------------------------
+# Fault-domain trace generator
+# ---------------------------------------------------------------------------
+
+
+def test_fault_domain_trace_deterministic_and_sound():
+    kw = dict(
+        n=8, rails=16, seed=5, duration_s=4 * 3600.0,
+        mtbf_node_s=4e5, mtbf_switch_s=4e5, mtbf_link_s=4e6,
+        mtbf_row_power_s=2e5, row_group_rows=4,
+    )
+    a = list(iter_fault_domain_trace(**kw))
+    b = list(iter_fault_domain_trace(**kw))
+    assert a == b
+    assert a and any(isinstance(ev, SwitchFail) for ev in a)
+    # no entity fails twice while down (recoveries sort first on ties:
+    # the generator may re-fail an entity the instant it comes back)
+    def _order(e):
+        recover = isinstance(e, (NodeRecover, SwitchRecover, LinkRecover))
+        return (e.time, 0 if recover else 1)
+
+    down = set()
+    for ev in sorted(a, key=_order):
+        if isinstance(ev, NodeFail):
+            eid = ("node", ev.node)
+        elif isinstance(ev, SwitchFail):
+            eid = ("switch", ev.switch)
+        elif isinstance(ev, LinkFail):
+            eid = ("link", ev.link)
+        elif isinstance(ev, NodeRecover):
+            down.discard(("node", ev.node))
+            continue
+        elif isinstance(ev, SwitchRecover):
+            down.discard(("switch", ev.switch))
+            continue
+        elif isinstance(ev, LinkRecover):
+            down.discard(("link", ev.link))
+            continue
+        else:
+            continue
+        assert eid not in down, f"{eid} double-failed"
+        down.add(eid)
+
+
+def test_row_power_downs_row_block_with_shared_recovery():
+    n, k = 8, 4
+    events = list(iter_fault_domain_trace(
+        n=n, seed=2, duration_s=48 * 3600.0,
+        mtbf_node_s=0.0, mtbf_row_power_s=4e5, row_group_rows=k,
+    ))
+    fails = [ev for ev in events if isinstance(ev, NodeFail)]
+    assert fails
+    by_time = {}
+    for ev in fails:
+        by_time.setdefault(ev.time, []).append(ev.node)
+    burst_t, burst = max(by_time.items(), key=lambda kv: len(kv[1]))
+    # one feed downs every up node of a k-row block simultaneously
+    assert len(burst) > 1
+    rows = {r for r, _ in burst}
+    assert max(rows) - min(rows) < k
+    assert min(rows) % k == 0
+    # exactly those nodes share one recovery instant
+    recs = [ev for ev in events
+            if isinstance(ev, NodeRecover) and set([ev.node]) <= set(burst)
+            and ev.time > burst_t]
+    by_rec = {}
+    for ev in recs:
+        by_rec.setdefault(ev.time, set()).add(ev.node)
+    assert any(nodes == set(burst) for nodes in by_rec.values())
+
+
+# ---------------------------------------------------------------------------
+# End-to-end determinism of a mixed chaos run
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_run_replays_identically():
+    def run_once():
+        events = poisson_trace(
+            seed=9, duration_s=6 * 3600.0, arrival_rate_per_h=12.0,
+            mean_service_s=3600.0,
+        ) + list(iter_fault_domain_trace(
+            n=SIDE, rails=CFG.r, seed=9, duration_s=6 * 3600.0,
+            mtbf_node_s=5e5, mtbf_switch_s=5e5, mtbf_link_s=5e6,
+            mtbf_row_power_s=4e5,
+        ))
+        sched = _sched(
+            goodput_model="flow",
+            checkpoint_interval_s=900.0,
+            quarantine=QuarantineConfig(threshold=2, base_s=1800.0),
+        )
+        m = sched.run(events)
+        return _fingerprint(m, sched)
+
+    assert run_once() == run_once()

@@ -331,3 +331,47 @@ class TestMidRunSync:
 
         m = TimelineMetrics(grid_nodes=4)
         assert m.summary()["events"] == 0   # no hook installed: no-op
+
+
+# ---------------------------------------------------------------------------
+# Span-name catalog: everything an instrumented run emits is in KNOWN_SPANS
+# ---------------------------------------------------------------------------
+
+
+class TestKnownSpanCatalog:
+    def test_instrumented_run_emits_only_cataloged_spans(self):
+        """A fully-instrumented run exercising every event family — jobs,
+        node faults, switch/link faults, quarantine releases — must emit
+        only span names listed in ``obs.schema.KNOWN_SPANS`` (so new
+        instrumentation points have to update the catalog)."""
+        from repro.cluster import (
+            QuarantineConfig,
+            iter_fault_domain_trace,
+        )
+        from repro.obs import known_span_names
+
+        side = 16
+        cfg = RailXConfig(m=4, n=4, R=2 * side)
+        events = _policy_events(side, duration_s=6 * 3600.0)
+        events += list(iter_fault_domain_trace(
+            n=side, rails=cfg.r, seed=13, duration_s=6 * 3600.0,
+            mtbf_node_s=4e5, mtbf_switch_s=3e5, mtbf_link_s=4e6,
+            mtbf_row_power_s=4e5,
+        ))
+        tracer = Tracer()
+        sched = ClusterScheduler(
+            cfg, n=side, policy="best_fit", goodput_model="flow",
+            validate_circuits=False, preemption=True, gang_scoring=True,
+            re_expansion=True, tracer=tracer,
+            checkpoint_interval_s=900.0,
+            quarantine=QuarantineConfig(threshold=2, base_s=1800.0),
+        )
+        sched.run(events)
+        emitted = tracer.span_names()
+        assert emitted, "instrumented run emitted no spans"
+        catalog = known_span_names()
+        assert emitted <= catalog, (
+            f"uncataloged span names: {sorted(emitted - catalog)}"
+        )
+        # the fault-path spans actually fired (the run is a real chaos run)
+        assert {"event.SwitchFail", "fault.repair"} <= emitted
