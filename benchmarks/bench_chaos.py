@@ -74,12 +74,47 @@ SCENARIOS = (
         mtbf_node_s=0.0, mtbf_row_power_s=1.5e4, mttr_row_power_s=3600.0)),
 )
 
+# trace-driven replay scenario (ISSUE 8): a recorded availability log —
+# here synthesized with Weibull-shaped bursty statistics the memoryless
+# generators cannot express — expanded by ``replay_availability_trace``
+# and run through the identical four invariants.  The kwargs feed
+# ``generate_weibull_records``.
+REPLAY_SCENARIO = ("trace_replay_weibull", dict(
+    mtbf_switch_s=4.0e5, mtbf_link_s=1.5e7,
+    mttr_s=1800.0, shape=1.6, burst_mean=2.0,
+))
+
+# seeded per-switch apply-failure injection for the scenario sweep: with
+# rate 0.2 and 2 retries a patched switch aborts its transaction with
+# probability 0.2^3 = 8e-3, so full runs see both plenty of retried
+# strokes and a deterministic handful of rollbacks
+TXN_INJECTION = dict(
+    apply_failure_rate=0.2, max_retries=2,
+    backoff_base_s=0.05, backoff_factor=2.0, seed=SEED,
+)
+
 
 def chaos_fabrics():
-    """Fabrics the scheduler can operate: those declaring ``job_network``."""
+    """(operable, skipped) fabric names: the scheduler can operate a
+    fabric iff its registration declares the ``job_network`` capability."""
     from repro.arch import get, names
 
-    return [nm for nm in names() if get(nm).has("job_network")]
+    operable = [nm for nm in names() if get(nm).has("job_network")]
+    skipped = [nm for nm in names() if not get(nm).has("job_network")]
+    return operable, skipped
+
+
+def announce_fabrics():
+    """Print the sweep roster once — skipped fabrics are named instead of
+    silently narrowing the sweep (the ROADMAP/obs no-silent-caps rule)."""
+    operable, skipped = chaos_fabrics()
+    print(f"bench_chaos fabrics: {','.join(operable)}")
+    if skipped:
+        print(
+            "bench_chaos skipping (no job_network capability): "
+            + ",".join(skipped)
+        )
+    return operable
 
 
 def _job_submits(cfg, count, spacing_s=300.0):
@@ -110,30 +145,54 @@ def run_scenario(
     jobs: int = 12,
     circuit_repair: bool = True,
     validate_circuits: bool = False,
+    txn: bool = False,
+    partial_migration: bool = False,
 ):
     """One seeded scenario run; returns ``(row, fingerprint)``.
 
     The fingerprint is a canonical JSON dump of everything observable —
     summary, survivability figures, and per-job histories — compared
     across a second identical run for the replay-determinism invariant.
+    ``txn=True`` applies every plan as a two-phase transaction with the
+    seeded ``TXN_INJECTION`` failure rate; ``name ==
+    REPLAY_SCENARIO[0]`` sources faults from a recorded availability
+    trace (``replay_availability_trace``) instead of the live generator,
+    asserting the expansion is byte-exact across replays.
     """
     from repro.cluster import (
         ClusterScheduler,
         QuarantineConfig,
+        TxnConfig,
+        generate_weibull_records,
         iter_fault_domain_trace,
+        replay_availability_trace,
     )
     from repro.core.topology import RailXConfig
 
     cfg = RailXConfig(m=4, n=4, R=2 * SIDE)
     submits = _job_submits(cfg, jobs)
-    events = submits + list(iter_fault_domain_trace(
-        n=SIDE, rails=cfg.r, seed=SEED, duration_s=duration_s,
-        emit_horizon_recoveries=True, **fault_kwargs,
-    ))
+    if name == REPLAY_SCENARIO[0]:
+        records = generate_weibull_records(
+            n=SIDE, rails=cfg.r, seed=SEED, duration_s=duration_s,
+            **fault_kwargs,
+        )
+        faults = replay_availability_trace(records)
+        # replay fidelity: expanding the recorded trace is pure
+        assert faults == replay_availability_trace(records), (
+            "availability-trace expansion is not byte-exact"
+        )
+    else:
+        faults = list(iter_fault_domain_trace(
+            n=SIDE, rails=cfg.r, seed=SEED, duration_s=duration_s,
+            emit_horizon_recoveries=True, **fault_kwargs,
+        ))
+    events = submits + faults
     sched = ClusterScheduler(
         cfg, n=SIDE, policy="best_fit", goodput_model="flow",
         validate_circuits=validate_circuits, fabric=fabric,
         circuit_repair=circuit_repair,
+        partial_migration=partial_migration,
+        ocs_txn=TxnConfig(**TXN_INJECTION) if txn else None,
         checkpoint_interval_s=900.0,
         quarantine=QuarantineConfig(threshold=3, base_s=1800.0, factor=2.0),
     )
@@ -224,27 +283,36 @@ def run_scenario(
         "quarantines": sv["quarantines"],
         "goodput_under_failure_ratio": ratio,
         "max_conservation_err": max_err,
+        "ocs_txn": txn,
+        "partial_migration": partial_migration,
+        "partial_migrations": sv["partial_migrations"],
+        "txn_commits": sv["txn_commits"],
+        "txn_retries": sv["txn_retries"],
+        "txn_retry_strokes": sv["txn_retry_strokes"],
+        "txn_rollbacks": sv["txn_rollbacks"],
+        "txn_rollback_strokes": sv["txn_rollback_strokes"],
     }
     return row, fingerprint
 
 
 def run_scenarios(duration_s: float, jobs: int):
-    """All scenarios x all operable fabrics, each run twice for the
-    replay-determinism invariant (invariant 3)."""
+    """All scenarios (fault-domain + trace replay) x all operable
+    fabrics, each run twice for the replay-determinism invariant
+    (invariant 3).  The whole sweep runs with transactional apply and
+    seeded apply-failure injection ON — the four invariants must survive
+    retried and rolled-back strokes, not just clean applies."""
     rows = []
-    for fabric in chaos_fabrics():
-        for name, fault_kwargs in SCENARIOS:
+    operable, _ = chaos_fabrics()
+    for fabric in operable:
+        for name, fault_kwargs in SCENARIOS + (REPLAY_SCENARIO,):
             validate = name == "switch_heavy"  # port discipline on repairs
-            row, fp1 = run_scenario(
-                fabric, name, fault_kwargs,
+            kwargs = dict(
                 duration_s=duration_s, jobs=jobs,
                 validate_circuits=validate,
+                txn=True, partial_migration=True,
             )
-            _, fp2 = run_scenario(
-                fabric, name, fault_kwargs,
-                duration_s=duration_s, jobs=jobs,
-                validate_circuits=validate,
-            )
+            row, fp1 = run_scenario(fabric, name, fault_kwargs, **kwargs)
+            _, fp2 = run_scenario(fabric, name, fault_kwargs, **kwargs)
             assert fp1 == fp2, (
                 f"{name}/{fabric}: replay not deterministic"
             )
@@ -255,7 +323,10 @@ def run_scenarios(duration_s: float, jobs: int):
                 f"fallbacks={row['repair_fallbacks']};"
                 f"lost={row['lost_work_s']};"
                 f"ratio={row['goodput_under_failure_ratio']};"
-                f"flips={row['circuits_flipped']}"
+                f"flips={row['circuits_flipped']};"
+                f"txn_retries={row['txn_retries']};"
+                f"txn_rollbacks={row['txn_rollbacks']};"
+                f"pmigrations={row['partial_migrations']}"
             )
     return rows
 
@@ -266,7 +337,7 @@ def repair_vs_replacement(duration_s: float, jobs: int):
     treating every switch fault as a node-style evict-and-replace."""
     name, fault_kwargs = next(s for s in SCENARIOS if s[0] == "switch_heavy")
     comparisons = []
-    for fabric in chaos_fabrics():
+    for fabric in chaos_fabrics()[0]:
         on, _ = run_scenario(
             fabric, name, fault_kwargs,
             duration_s=duration_s, jobs=jobs, circuit_repair=True,
@@ -300,6 +371,82 @@ def repair_vs_replacement(duration_s: float, jobs: int):
     return comparisons
 
 
+def partial_vs_full_migration(jobs: int = 4):
+    """Dead-row burst: every X switch of the first allocation row of
+    each running job fails at once and recovers much later.  With
+    ``partial_migration`` on, the scheduler moves only the dead rows and
+    pins every surviving circuit; off, each hit job is evicted and fully
+    re-placed after the switches return.  Partial migration must fire,
+    and must cost strictly fewer OCS mirror strokes end to end."""
+    from repro.cluster import ClusterScheduler, SwitchFail, SwitchRecover
+    from repro.core.topology import RailXConfig
+
+    cfg = RailXConfig(m=4, n=4, R=2 * SIDE)
+    burst_t, recover_t = 1500.0, 5400.0
+    comparisons = []
+    for fabric in chaos_fabrics()[0]:
+        # probe run to the burst instant to learn which rows jobs hold;
+        # scheduling below the burst is flag-independent, so both
+        # measured runs see exactly this state at burst_t
+        probe = ClusterScheduler(
+            cfg, n=SIDE, policy="best_fit", goodput_model="flow",
+            fabric=fabric, circuit_repair=True,
+            checkpoint_interval_s=900.0,
+        )
+        probe.run(_job_submits(cfg, jobs), until=burst_t)
+        dead_rows = sorted({
+            rj.alloc.rows[0] for rj in probe.running.values()
+        })
+        assert dead_rows, f"{fabric}: no running jobs at burst time"
+        faults = [
+            ev
+            for row in dead_rows
+            for rail in range(cfg.r)
+            for ev in (
+                SwitchFail(time=burst_t, switch=("X", row, rail)),
+                SwitchRecover(time=recover_t, switch=("X", row, rail)),
+            )
+        ]
+        per = {}
+        for pm in (True, False):
+            sched = ClusterScheduler(
+                cfg, n=SIDE, policy="best_fit", goodput_model="flow",
+                fabric=fabric, circuit_repair=True,
+                partial_migration=pm, checkpoint_interval_s=900.0,
+            )
+            m = sched.run(_job_submits(cfg, jobs) + faults)
+            sv = m.survivability_summary()
+            per[pm] = {
+                "circuits_flipped": m.circuits_flipped,
+                "partial_migrations": sv["partial_migrations"],
+                "migrations": sum(r.migrations for r in m.records.values()),
+                "lost_work_s": sv["lost_work_s"],
+                "finished": m.summary()["finished"],
+            }
+        on, off = per[True], per[False]
+        assert on["partial_migrations"] > 0, (
+            f"{fabric}: dead-row burst never exercised partial migration"
+        )
+        assert on["circuits_flipped"] < off["circuits_flipped"], (
+            f"{fabric}: partial migration flipped {on['circuits_flipped']}"
+            f" circuits, full migration only {off['circuits_flipped']}"
+        )
+        comparisons.append({
+            "fabric": fabric,
+            "dead_rows": dead_rows,
+            "partial": on,
+            "full": off,
+        })
+        print(
+            f"bench_chaos_partial_vs_full,{0.0:.1f},"
+            f"fabric={fabric};partial_flips={on['circuits_flipped']};"
+            f"full_flips={off['circuits_flipped']};"
+            f"pmigrations={on['partial_migrations']};"
+            f"partial_lost={on['lost_work_s']};full_lost={off['lost_work_s']}"
+        )
+    return comparisons
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -327,16 +474,23 @@ def main() -> None:
 
 
 def _run(args) -> None:
+    announce_fabrics()
     if args.smoke:
         rows = run_scenarios(duration_s=4 * 3600.0, jobs=8)
         assert any(r["repairs"] > 0 for r in rows), rows
         assert any(r["node_faults"] > 0 for r in rows), rows
+        assert any(r["txn_retries"] > 0 for r in rows), rows
         repair_vs_replacement(duration_s=4 * 3600.0, jobs=8)
+        partial_vs_full_migration(jobs=4)
         print("smoke ok")
         return
 
     rows = run_scenarios(duration_s=8 * 3600.0, jobs=12)
+    assert any(r["txn_rollbacks"] > 0 for r in rows), (
+        "injection sweep produced no rollbacks — raise TXN_INJECTION rate"
+    )
     comparisons = repair_vs_replacement(duration_s=8 * 3600.0, jobs=12)
+    pvf = partial_vs_full_migration(jobs=4)
     data = {}
     if os.path.exists(OUT):
         with open(OUT) as f:
@@ -344,8 +498,10 @@ def _run(args) -> None:
     data["chaos"] = {
         "grid": f"{SIDE}x{SIDE}",
         "seed": SEED,
+        "txn_injection": TXN_INJECTION,
         "rows": rows,
         "repair_vs_replacement": comparisons,
+        "partial_vs_full_migration": pvf,
     }
     with open(OUT, "w") as f:
         json.dump(data, f, indent=2)

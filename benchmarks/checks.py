@@ -268,11 +268,20 @@ def _chaos_check(
     duration_s: float,
     jobs: int,
     circuit_repair: bool = True,
+    txn: bool = False,
+    partial_migration: bool = False,
 ) -> Check:
     """Replay one ``bench_chaos`` scenario (its own four invariants run
     inside ``run_scenario`` and abort the check on violation) and pin the
-    survivability figures as fidelity values."""
-    fault_kwargs = dict(bench_chaos.SCENARIOS)[scenario]
+    survivability figures — including the transaction retry/rollback
+    counters — as byte-exact fidelity values.  The replay scenario
+    (``bench_chaos.REPLAY_SCENARIO``) sources its faults from a recorded
+    availability trace; run with injection on it must emit the
+    transactional apply/rollback spans."""
+    if scenario == bench_chaos.REPLAY_SCENARIO[0]:
+        fault_kwargs = bench_chaos.REPLAY_SCENARIO[1]
+    else:
+        fault_kwargs = dict(bench_chaos.SCENARIOS)[scenario]
     validate = scenario == "switch_heavy"
 
     def run() -> Mapping:
@@ -280,11 +289,23 @@ def _chaos_check(
             reference.get("fabric", "railx-hyperx"), scenario, fault_kwargs,
             duration_s=duration_s, jobs=jobs,
             circuit_repair=circuit_repair, validate_circuits=validate,
+            txn=txn, partial_migration=partial_migration,
         )
         return row
 
+    spans = ()
+    if scenario == "switch_heavy" and circuit_repair:
+        spans += (
+            "event.SwitchFail", "event.SwitchRecover",
+            "fault.repair", "fault.restore",
+        )
+    if scenario == bench_chaos.REPLAY_SCENARIO[0]:
+        spans += ("event.SwitchFail", "event.SwitchRecover")
+    if txn:
+        spans += ("ocs.txn_apply", "ocs.txn_rollback")
     return Check(
-        name=f"cluster/chaos/{scenario}/{duration_s / 3600.0:g}h",
+        name=f"cluster/chaos/{scenario}/{duration_s / 3600.0:g}h"
+        + ("/txn" if txn else ""),
         run=run,
         fidelity={k: reference[k] for k in _CHAOS_FIDELITY},
         sanity=(
@@ -292,13 +313,13 @@ def _chaos_check(
                 r["node_faults"] + r["switch_faults"] + r["link_faults"] > 0
             )),
             ("work conserved", lambda r: r["max_conservation_err"] <= 1e-6),
-        ),
+        )
+        + ((
+            ("txn retries observed", lambda r: r["txn_retries"] > 0),
+            ("txn rollbacks observed", lambda r: r["txn_rollbacks"] > 0),
+        ) if txn else ()),
         ref_wall_s=float(reference["wall_s"]),
-        trace_spans=(
-            ("event.SwitchFail", "event.SwitchRecover",
-             "fault.repair", "fault.restore")
-            if scenario == "switch_heavy" and circuit_repair else ()
-        ),
+        trace_spans=spans,
     )
 
 
@@ -307,6 +328,8 @@ _CHAOS_FIDELITY = (
     "reconfig_rounds", "circuits_flipped", "node_faults", "switch_faults",
     "link_faults", "repairs", "repair_fallbacks", "lost_work_s",
     "mean_mttr_s", "quarantines", "goodput_under_failure_ratio",
+    "partial_migrations", "txn_commits", "txn_retries",
+    "txn_retry_strokes", "txn_rollbacks", "txn_rollback_strokes",
 )
 
 
@@ -342,7 +365,26 @@ SMOKE_CHAOS_SWITCH_HEAVY = {
     "link_faults": 0, "repairs": 69, "repair_fallbacks": 0,
     "lost_work_s": 0.0, "mean_mttr_s": 2146.941, "quarantines": 0,
     "goodput_under_failure_ratio": 0.9152,
+    # transactional apply off: the flags-off path must stay byte-identical
+    "partial_migrations": 0, "txn_commits": 0, "txn_retries": 0,
+    "txn_retry_strokes": 0, "txn_rollbacks": 0, "txn_rollback_strokes": 0,
     "wall_s": 0.15,
+}
+
+SMOKE_CHAOS_REPLAY = {
+    # trace_replay_weibull with seeded apply-failure injection + partial
+    # migration on: faults expanded from a recorded availability trace
+    "fabric": "railx-hyperx",
+    "events": 282, "jobs": 8, "finished": 8, "utilization": 0.3383,
+    "mean_goodput": 0.8723, "reconfig_rounds": 162,
+    "circuits_flipped": 48278, "node_faults": 0, "switch_faults": 30,
+    "link_faults": 20, "repairs": 166, "repair_fallbacks": 0,
+    "lost_work_s": 0.0, "mean_mttr_s": 2141.677, "quarantines": 0,
+    "goodput_under_failure_ratio": 0.9274,
+    "partial_migrations": 0, "txn_commits": 174, "txn_retries": 1961,
+    "txn_retry_strokes": 10150, "txn_rollbacks": 55,
+    "txn_rollback_strokes": 31688,
+    "wall_s": 0.47,
 }
 
 SMOKE_EXACT_RAILX_8 = {
@@ -378,6 +420,11 @@ def smoke_table() -> Tuple[Check, ...]:
             "switch_heavy", SMOKE_CHAOS_SWITCH_HEAVY,
             duration_s=4 * 3600.0, jobs=8,
         ),
+        _chaos_check(
+            bench_chaos.REPLAY_SCENARIO[0], SMOKE_CHAOS_REPLAY,
+            duration_s=4 * 3600.0, jobs=8,
+            txn=True, partial_migration=True,
+        ),
     )
 
 
@@ -400,6 +447,8 @@ def full_table() -> Tuple[Check, ...]:
             row["scenario"], row,
             duration_s=8 * 3600.0, jobs=12,
             circuit_repair=row.get("circuit_repair", True),
+            txn=row.get("ocs_txn", False),
+            partial_migration=row.get("partial_migration", False),
         ))
     with open(BENCH_SIMULATOR) as f:
         bs = json.load(f)

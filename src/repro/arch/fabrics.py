@@ -247,6 +247,18 @@ def _railx_job_network(cfg, mapping, alloc) -> FlowNetwork:
     return build_job_network(cfg, mapping, alloc)
 
 
+def _torus2d_job_network(cfg, mapping, alloc) -> FlowNetwork:
+    from ..cluster.metrics import build_job_network_torus
+
+    return build_job_network_torus(cfg, mapping, alloc)
+
+
+def _rail_only_job_network(cfg, mapping, alloc) -> FlowNetwork:
+    from ..cluster.metrics import build_job_network_rail_only
+
+    return build_job_network_rail_only(cfg, mapping, alloc)
+
+
 # ---------------------------------------------------------------------------
 # Registrations
 # ---------------------------------------------------------------------------
@@ -310,6 +322,7 @@ TORUS_2D = register(Architecture(
         nonminimal=routing_mod.nonminimal_route,
     ),
     ring_orders=topo.torus_ring_orders,
+    job_network=_torus2d_job_network,
     build_adj=topo.build_torus_2d,
 ))
 
@@ -416,6 +429,7 @@ RAIL_ONLY = register(Architecture(
             order=130, build=lambda p: cost_mod.rail_only_rail_planes(4096, p)
         ),
     ),
+    job_network=_rail_only_job_network,
 ))
 
 

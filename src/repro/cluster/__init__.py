@@ -71,6 +71,7 @@ from .faults import (
     FaultDomain,
     FlapTracker,
     QuarantineConfig,
+    irreparable_lines,
     link_hits_circuits,
     synthesize_degraded,
 )
@@ -91,6 +92,7 @@ from .placement import (
     first_fit,
     gang_scored_fit,
     get_policy,
+    partial_refit,
     rail_aware,
 )
 from .reconfig import (
@@ -98,6 +100,7 @@ from .reconfig import (
     ReconfigCostModel,
     ReconfigPlan,
     SwitchPatch,
+    TxnConfig,
     apply_plan,
     canonical_allocation,
     diff_circuits,
@@ -107,17 +110,21 @@ from .reconfig import (
 )
 from .scheduler import ClusterScheduler
 from .trace import (
+    AvailabilityRecord,
     fault_domain_trace,
     fig20_trace,
     failure_trace,
+    generate_weibull_records,
     iter_failure_trace,
     iter_fault_domain_trace,
     iter_poisson_trace,
     poisson_trace,
+    replay_availability_trace,
     replay_trace,
 )
 
 __all__ = [
+    "AvailabilityRecord",
     "CircuitShapeCache",
     "ClusterScheduler",
     "Event",
@@ -146,6 +153,7 @@ __all__ = [
     "SwitchPatch",
     "TieredBacklog",
     "TimelineMetrics",
+    "TxnConfig",
     "apply_plan",
     "best_fit",
     "canonical_allocation",
@@ -157,7 +165,9 @@ __all__ = [
     "fig20_trace",
     "first_fit",
     "gang_scored_fit",
+    "generate_weibull_records",
     "get_policy",
+    "irreparable_lines",
     "iter_failure_trace",
     "iter_fault_domain_trace",
     "iter_poisson_trace",
@@ -166,10 +176,12 @@ __all__ = [
     "synthesize_degraded",
     "make_job",
     "model_spec_from_config",
+    "partial_refit",
     "plan_job_mapping",
     "poisson_trace",
     "rail_aware",
     "relabel_circuits",
+    "replay_availability_trace",
     "replay_trace",
     "validate_job_reconfig",
 ]

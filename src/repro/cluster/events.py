@@ -110,9 +110,10 @@ class QuarantineRelease:
     in input traces)."""
 
     time: float
-    kind: str                         # "node" | "switch"
+    kind: str                         # "node" | "switch" | "link"
     node: Optional[Coord] = None
     switch: Optional[SwitchKey] = None
+    link: Optional[LinkId] = None
 
 
 Event = Union[

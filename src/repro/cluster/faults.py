@@ -38,9 +38,13 @@ On a fault touching a running job the scheduler tries, in order:
    costed by ``ReconfigCostModel`` like any patch).  The job keeps its
    nodes and continues at ``base_goodput x factor`` where ``factor`` is
    the worst surviving-rail fraction of any dimension group.
-2. **migrate** — full-size re-placement elsewhere (checkpoint-restore).
-3. **shrink** — elastic restart with the DP degree halved.
-4. **requeue** — back to the backlog with the remaining work.
+2. **partial-migrate** — when repair is impossible, replace only the
+   irreparable rows/columns (:func:`irreparable_lines` names them,
+   ``placement.partial_refit`` finds substitutes) and keep the surviving
+   lines pinned.
+3. **migrate** — full-size re-placement elsewhere (checkpoint-restore).
+4. **shrink** — elastic restart with the DP degree halved.
+5. **requeue** — back to the backlog with the remaining work.
 
 Adding a new fault domain
 -------------------------
@@ -268,6 +272,68 @@ def faults_hit_target(
     if failed_switches and not failed_switches.isdisjoint(target):
         return True
     return any(link_hits_circuits(ln, target) for ln in failed_links)
+
+
+def irreparable_lines(
+    cfg: RailXConfig,
+    mapping: MappingResult,
+    alloc: JobAllocation,
+    failed_switches: FrozenSet[SwitchKey] = frozenset(),
+    failed_links: FrozenSet[LinkId] = frozenset(),
+) -> Tuple[FrozenSet[int], FrozenSet[int]]:
+    """The allocation rows and columns whose surviving rails cannot carry
+    the job's circuits — exactly the lines that make
+    :func:`synthesize_degraded` return None.
+
+    Mirrors its live-rail census: a line (an X group = grid row, a Y
+    group = grid column) is irreparable when, for some spec splitting
+    along it, some subgroup's live-rail count drops below what the spec
+    needs — >= 1 rail for ring dims, >= the Lemma-3.1 ring count for
+    all-to-all dims.  Replacing the line cures both failure modes it can
+    suffer: its own dead switches stay behind, and its members'
+    transceivers are per-node hardware, so substitute nodes bring fresh
+    ones.  The partial-migration rung replaces exactly these lines
+    (``placement.partial_refit``) and repatches the diff, keeping every
+    other line's circuits pinned.
+
+    With ``synthesize_degraded`` returning a repair, both sets are empty.
+    """
+    bad_rows: Set[int] = set()
+    bad_cols: Set[int] = set()
+    for phys, groups_axis, coords in (
+        ("X", alloc.rows, alloc.cols),
+        ("Y", alloc.cols, alloc.rows),
+    ):
+        specs = [s for s in mapping.specs if s.phys == phys]
+        if not specs:
+            continue
+        need = math.prod(s.scale for s in specs)
+        ranges = _rail_ranges(specs)
+        bad = bad_rows if phys == "X" else bad_cols
+        for which, spec in enumerate(specs):
+            if spec.scale < 2:
+                continue
+            lo, hi = ranges[which]
+            if spec.interconnect == "all_to_all":
+                needed = len(all_to_all_rail_rings(spec.scale))
+            else:
+                needed = 1
+            for members in _subgroups(list(coords)[:need], specs, which):
+                for group in groups_axis:
+                    if group in bad:
+                        continue
+                    live = sum(
+                        1 for rail in range(lo, hi)
+                        if (phys, group, rail) not in failed_switches
+                        and not any(
+                            (_line_node(phys, group, m), phys, rail)
+                            in failed_links
+                            for m in members
+                        )
+                    )
+                    if live < needed:
+                        bad.add(group)
+    return frozenset(bad_rows), frozenset(bad_cols)
 
 
 # ---------------------------------------------------------------------------

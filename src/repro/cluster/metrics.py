@@ -94,6 +94,61 @@ def build_job_network(
     return net
 
 
+def build_job_network_torus(
+    cfg: RailXConfig, mapping: MappingResult, alloc: JobAllocation
+) -> FlowNetwork:
+    """The same job's rails on a static 2-D torus (no OCS): every
+    dimension group is a fixed neighbor ring over the subgroup's
+    coordinates with the full rail trunk on each hop.  Ring dims match
+    the reconfigured fabric hop-for-hop, but all-to-all dims have no
+    Hamiltonian rail rings to spread over and must route multi-hop
+    around the one fixed ring — the goodput gap to ``railx-hyperx`` is
+    precisely the reconfigurability advantage §7 argues for."""
+    net = FlowNetwork()
+    for phys in ("X", "Y"):
+        lines = alloc.rows if phys == "X" else alloc.cols
+        for spec, groups, (lo, hi) in _spec_groups(mapping, alloc, phys):
+            rails = hi - lo
+            for members in groups:
+                for i in range(len(members)):
+                    a, b = members[i], members[(i + 1) % len(members)]
+                    if a == b:
+                        continue
+                    for line in lines:
+                        net.add_link(
+                            _vertex(phys, line, a),
+                            _vertex(phys, line, b),
+                            float(rails),
+                        )
+    return net
+
+
+def build_job_network_rail_only(
+    cfg: RailXConfig, mapping: MappingResult, alloc: JobAllocation
+) -> FlowNetwork:
+    """The same job on a rail-only fabric (arXiv 2307.12169): each
+    dimension subgroup's rail range terminates in one electrical rail
+    switch per line, so members reach each other in two hops through the
+    hub with the aggregate rail capacity on their uplink.  Any-to-any
+    within a rail group is free of ring hops (all-to-all dims don't pay
+    the torus's multi-hop detour) but every byte crosses the shared
+    uplink twice — a different bottleneck shape than either the torus or
+    the reconfigured point-to-point circuits."""
+    net = FlowNetwork()
+    for phys in ("X", "Y"):
+        lines = alloc.rows if phys == "X" else alloc.cols
+        for spec, groups, (lo, hi) in _spec_groups(mapping, alloc, phys):
+            rails = hi - lo
+            for gi, members in enumerate(groups):
+                for line in lines:
+                    hub = ("rail-sw", phys, line, lo, gi)
+                    for m in dict.fromkeys(members):
+                        net.add_link(
+                            _vertex(phys, line, m), hub, float(rails)
+                        )
+    return net
+
+
 def estimate_goodput(
     cfg: RailXConfig,
     job: JobSpec,
@@ -282,6 +337,7 @@ class JobRecord:
     expansions: int = 0
     preemptions: int = 0          # times this job was preemption-evicted
     repairs: int = 0              # in-place circuit repairs (degrade/heal)
+    partial_migrations: int = 0   # dead-line-only moves (ladder rung 2)
     lost_work_s: float = 0.0      # work lost to checkpoint rollback
     segments: List[RunSegment] = dataclasses.field(default_factory=list)
 
@@ -336,12 +392,19 @@ class TimelineMetrics:
     link_faults: int = 0                   # LinkFail events observed
     repairs: int = 0                       # successful in-place circuit repairs
     repair_fallbacks: int = 0              # repairs that fell to the ladder
+    partial_migrations: int = 0            # dead-line-only moves (rung 2)
     lost_work_s: float = 0.0               # checkpoint-rollback work lost
     quarantines: int = 0                   # entities sent to flap burn-in
     mttr_total_s: float = 0.0              # summed fail->restore intervals
     mttr_count: int = 0                    # restores with a matching fail
     degraded_work_s: float = 0.0           # work run in degraded segments
     degraded_factor_work_s: float = 0.0    # sum(factor * work) over those
+    # transactional OCS apply (all zero when ocs_txn is off)
+    txn_commits: int = 0                   # committed transactions
+    txn_retries: int = 0                   # per-switch strokes that re-rolled
+    txn_retry_strokes: int = 0             # mirror strokes spent on retries
+    txn_rollbacks: int = 0                 # retry-exhausted transactions
+    txn_rollback_strokes: int = 0          # mirror strokes spent undoing them
     circuit_cache_hits: int = 0
     circuit_cache_misses: int = 0
     goodput_cache_hits: int = 0
@@ -432,6 +495,7 @@ class TimelineMetrics:
             "link_faults": self.link_faults,
             "repairs": self.repairs,
             "repair_fallbacks": self.repair_fallbacks,
+            "partial_migrations": self.partial_migrations,
             "lost_work_s": round(self.lost_work_s, 3),
             "mean_mttr_s": round(
                 self.mttr_total_s / self.mttr_count, 3
@@ -441,6 +505,11 @@ class TimelineMetrics:
             "goodput_under_failure_ratio": round(
                 self.degraded_factor_work_s / self.degraded_work_s, 4
             ) if self.degraded_work_s > 0 else 1.0,
+            "txn_commits": self.txn_commits,
+            "txn_retries": self.txn_retries,
+            "txn_retry_strokes": self.txn_retry_strokes,
+            "txn_rollbacks": self.txn_rollbacks,
+            "txn_rollback_strokes": self.txn_rollback_strokes,
         }
 
     def summary(self) -> Dict[str, float]:

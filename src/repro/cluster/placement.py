@@ -35,7 +35,7 @@ from ..core.availability import (
     allocate_multi_jobs_masks,
     allocate_multi_jobs_ref,
 )
-from .occupancy import OccupancyIndex, lowest_bits, mask_of
+from .occupancy import OccupancyIndex, iter_bits, lowest_bits, mask_of
 
 Coord = Tuple[int, int]
 PlacementPolicy = Callable[[int, OccupancyIndex, int, int], Optional[JobAllocation]]
@@ -178,6 +178,62 @@ def rail_aware(
         if len(prop.rows) >= rows_req and len(prop.cols) >= cols_req:
             return JobAllocation(prop.rows[:rows_req], prop.cols[:cols_req])
     return None
+
+
+def partial_refit(
+    n: int,
+    occ: OccupancyIndex,
+    alloc: JobAllocation,
+    bad_rows: FrozenSet[int],
+    bad_cols: FrozenSet[int],
+) -> Optional[JobAllocation]:
+    """Minimal sub-allocation diff for the partial-migration rung: keep
+    every line of ``alloc`` not named in ``bad_rows``/``bad_cols`` and
+    substitute free lines for the bad ones, preserving the rectangle
+    shape.
+
+    The occupancy index still shows the job occupying ``alloc`` — kept
+    lines are valid precisely because the job's own cells sit on them.
+    Substitutes are chosen greedily and deterministically: rows ascending
+    among rows free across every kept column, then columns ascending
+    among columns free across every row of the new rectangle.  Bad lines
+    are never reused (their switches are the dead hardware being
+    escaped).  Returns None when no same-shape substitution exists —
+    the scheduler then falls through to a full migrate."""
+    kept_rows = [r for r in alloc.rows if r not in bad_rows]
+    kept_cols = [c for c in alloc.cols if c not in bad_cols]
+    need_rows = len(alloc.rows) - len(kept_rows)
+    need_cols = len(alloc.cols) - len(kept_cols)
+    if need_rows == 0 and need_cols == 0:
+        return None
+    old_rows = set(alloc.rows)
+    old_cols = set(alloc.cols)
+    kept_cmask = mask_of(tuple(kept_cols))
+    new_rows: List[int] = []
+    for r in range(n):
+        if len(new_rows) == need_rows:
+            break
+        if r in old_rows:
+            continue
+        if occ.free_row(r) & kept_cmask == kept_cmask:
+            new_rows.append(r)
+    if len(new_rows) < need_rows:
+        return None
+    rows2 = sorted(kept_rows + new_rows)
+    common = (1 << n) - 1
+    for r in rows2:
+        common &= occ.free_row(r)
+    new_cols: List[int] = []
+    for c in iter_bits(common):
+        if len(new_cols) == need_cols:
+            break
+        if c in old_cols:
+            continue
+        new_cols.append(c)
+    if len(new_cols) < need_cols:
+        return None
+    cols2 = sorted(kept_cols + new_cols)
+    return JobAllocation(tuple(rows2), tuple(cols2))
 
 
 # ---------------------------------------------------------------------------

@@ -141,6 +141,37 @@ def job_target_circuits(
 
 
 @dataclasses.dataclass(frozen=True)
+class TxnConfig:
+    """Two-phase transactional OCS apply (failure-aware reconfiguration).
+
+    Real arrays of cheap switches do not apply a patch plan atomically:
+    each switch's mirror stroke is its own physical operation and can
+    fail.  When a scheduler is constructed with ``ocs_txn=TxnConfig(...)``
+    every install/repatch becomes a transaction: per patched switch a
+    seeded dice roll (``apply_failure_rate``) decides whether the stroke
+    sticks; a failed stroke is retried up to ``max_retries`` times with
+    exponential backoff (``backoff_base_s * backoff_factor**attempt``,
+    charged as extra downtime), and when retries exhaust, the whole
+    transaction rolls back to the last consistent circuit set — committed
+    strokes are physically undone via the inverted plan (the involution
+    ``ReconfigPlan.inverted``), the caller sees an abort, and the job
+    demotes to the next recovery-ladder rung instead of running on
+    corrupted circuits.
+
+    ``apply_failure_rate=0.0`` (the default) makes every transaction
+    commit on the first attempt with zero extra downtime — scheduling is
+    then byte-identical to the non-transactional path (fingerprint-tested
+    in ``tests/test_txn_migration.py``).
+    """
+
+    apply_failure_rate: float = 0.0
+    max_retries: int = 3
+    backoff_base_s: float = 0.05
+    backoff_factor: float = 2.0
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
 class SwitchPatch:
     """Reprogramming instructions for one optical switch."""
 

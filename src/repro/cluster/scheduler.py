@@ -18,15 +18,32 @@ node-recover events.  The scheduler owns:
   set is a guaranteed re-failure).  With a single tier (the default) the
   backlog is exactly the seed's FIFO list.
 
-Failure handling (§6.6): when a node inside a running job's rectangle
-fails, the scheduler tries, in order,
+Failure handling (§6.6) — the **recovery ladder**.  A fault touching a
+running job walks the rungs in order until one succeeds; each rung is
+strictly cheaper in mirror strokes / lost work than the next:
 
-1. **migrate** — re-place the same footprint on the surviving free
-   nodes (checkpoint-restore move; full reconfiguration cost);
-2. **shrink**  — elastic restart with the FFN/expert data-parallel
-   degree halved (the ``launch/elastic`` recovery semantics), as long as
-   the shrunken footprint stays >= ``job.min_nodes``;
-3. **requeue** — back to the backlog with its remaining work.
+1. **repair** (``circuit_repair=True``, the default; switch/link faults
+   only) — re-synthesize the job's circuits over the surviving rails in
+   place (``faults.synthesize_degraded``), patched as a minimal
+   per-switch diff; the job keeps its nodes at degraded goodput;
+2. **partial-migrate** (``partial_migration=True``, off by default) —
+   when repair is impossible (or its transaction aborted), move *only*
+   the rows/columns whose rails died (``faults.irreparable_lines`` +
+   ``placement.partial_refit``), keeping the surviving lines and their
+   circuits pinned; checkpoint-lossy like any failure-driven move;
+3. **migrate** (always on) — full-size re-placement on the surviving
+   free nodes (checkpoint-restore move; full reconfiguration cost);
+4. **shrink** (always on; bounded by ``job.min_nodes``) — elastic
+   restart with the FFN/expert data-parallel degree halved (the
+   ``launch/elastic`` recovery semantics);
+5. **requeue** (always on) — back to the backlog with remaining work.
+
+Node faults enter at rung 3 (their eviction is unavoidable); switch and
+link faults enter at rung 1.  With ``ocs_txn=TxnConfig(...)`` every
+install/repatch is a two-phase transaction whose per-switch strokes can
+fail (seeded injection): a retry-exhausted transaction rolls the circuit
+state back to the last consistent set and the job demotes to the next
+rung instead of running on corrupted circuits.
 
 Policy engine (§6.6, §7 MLaaS operation; all off by default, in which
 case scheduling is byte-identical to the plain FIFO scheduler):
@@ -61,6 +78,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import random
 from typing import Dict, FrozenSet, Iterable, List, Literal, Optional, Set, Tuple
 
 from ..core.availability import JobAllocation
@@ -87,13 +105,14 @@ from .faults import (
     LinkId,
     QuarantineConfig,
     faults_hit_target,
+    irreparable_lines,
     link_hits_circuits,
     synthesize_degraded,
 )
 from .jobs import JobMapping, JobSpec, plan_job_mapping
 from .metrics import GoodputCache, JobRecord, TimelineMetrics
 from .occupancy import OccupancyIndex
-from .placement import PlacementPolicy, gang_scored_fit, get_policy
+from .placement import PlacementPolicy, gang_scored_fit, get_policy, partial_refit
 from .reconfig import (
     Circuit,
     CircuitMap,
@@ -102,6 +121,7 @@ from .reconfig import (
     ReconfigPlan,
     SwitchKey,
     SwitchPatch,
+    TxnConfig,
     _check_port_discipline,
 )
 
@@ -119,6 +139,94 @@ class RunningJob:
     epoch: int = 0                # run-segment counter (JobFinish matching)
     base_goodput: float = 1.0     # fault-free goodput of this placement
     degradation: float = 1.0      # surviving-rail factor (goodput = base * this)
+
+
+class _TxnAbort(Exception):
+    """Internal: a per-switch stroke exhausted its retries mid-transaction
+    (see ``TxnConfig``).  Never escapes the scheduler — ``_txn_run``
+    catches it, rolls the circuit state back, and reports the abort."""
+
+
+class _CircuitTxn:
+    """Undo journal for one two-phase OCS transaction.
+
+    ``_install``/``_uninstall`` call ``snapshot(key)`` before mutating a
+    switch key's state and ``roll(patch)`` before committing a physical
+    stroke to it.  ``roll`` dices the injected per-switch failure; on
+    retry exhaustion it raises ``_TxnAbort`` and ``rollback`` restores
+    every touched key — refcounts, live circuits, orphans, and the
+    reconfig metrics triple — to its exact pre-transaction value.  The
+    mirror strokes needed to physically undo the committed patches are
+    accounted via ``ReconfigPlan.inverted()`` (the revert involution)."""
+
+    def __init__(self, sched: "ClusterScheduler"):
+        self.sched = sched
+        m = sched.metrics
+        self._metrics0 = (
+            m.reconfig_rounds, m.circuits_flipped, m.total_downtime_s
+        )
+        # key -> (refs copy | None, live frozenset | None, orphans copy | None)
+        self._saved: Dict[SwitchKey, Tuple] = {}
+        self._order: List[SwitchKey] = []
+        self.committed: List[SwitchPatch] = []
+        self.retries = 0
+        self.retry_strokes = 0
+        self.backoff_s = 0.0
+
+    def snapshot(self, key: SwitchKey) -> None:
+        if key in self._saved:
+            return
+        s = self.sched
+        refs = s._switch_refs.get(key)
+        orph = s._orphans.get(key)
+        self._saved[key] = (
+            dict(refs) if refs is not None else None,
+            s.circuits.get(key),
+            set(orph) if orph is not None else None,
+        )
+        self._order.append(key)
+
+    def roll(self, patch: SwitchPatch) -> None:
+        """Dice the physical stroke for one patched switch; each failed
+        attempt charges its strokes and an exponential backoff, and the
+        (max_retries+1)-th consecutive failure aborts the transaction."""
+        cfgt = self.sched.ocs_txn
+        rng = self.sched._txn_rng
+        attempt = 0
+        while rng.random() < cfgt.apply_failure_rate:
+            if attempt >= cfgt.max_retries:
+                raise _TxnAbort()
+            self.retries += 1
+            self.retry_strokes += patch.flips
+            self.backoff_s += (
+                cfgt.backoff_base_s * cfgt.backoff_factor ** attempt
+            )
+            attempt += 1
+        self.committed.append(patch)
+
+    def rollback(self) -> None:
+        s = self.sched
+        for key in reversed(self._order):
+            refs, live, orph = self._saved[key]
+            if refs is None:
+                s._switch_refs.pop(key, None)
+            else:
+                s._switch_refs[key] = refs
+            if orph is None:
+                s._orphans.pop(key, None)
+            else:
+                s._orphans[key] = orph
+            if live is None:
+                if s.circuits.pop(key, None) is not None:
+                    s._line_sub(key)
+            else:
+                if key not in s.circuits:
+                    s._line_add(key)
+                s.circuits[key] = live
+        m = s.metrics
+        (m.reconfig_rounds, m.circuits_flipped, m.total_downtime_s) = (
+            self._metrics0
+        )
 
 
 def _event_trace_args(ev: Event) -> Dict[str, object]:
@@ -143,6 +251,10 @@ def _event_trace_args(ev: Event) -> Dict[str, object]:
             args["node"] = list(ev.node)
         if ev.switch is not None:
             args["switch"] = list(ev.switch)
+        if ev.link is not None:
+            args["node"] = list(ev.link[0])
+            args["dim"] = ev.link[1]
+            args["rail"] = ev.link[2]
     return args
 
 
@@ -166,6 +278,8 @@ class ClusterScheduler:
         circuit_repair: bool = True,
         checkpoint_interval_s: Optional[float] = None,
         quarantine: Optional[QuarantineConfig] = None,
+        ocs_txn: Optional[TxnConfig] = None,
+        partial_migration: bool = False,
     ):
         self.cfg = cfg
         self.n = n if n is not None else cfg.nodes_per_side
@@ -193,6 +307,19 @@ class ClusterScheduler:
         self._flaps: Optional[FlapTracker] = (
             FlapTracker(quarantine) if quarantine is not None else None
         )
+        # transactional OCS apply + partial migration (ISSUE 8).  With
+        # ``ocs_txn=None`` installs stay on the direct (atomic) path and
+        # scheduling is byte-identical to the non-transactional scheduler;
+        # a TxnConfig with apply_failure_rate=0.0 commits every stroke
+        # first try with zero extra downtime, so only injected failures
+        # can perturb timelines (fingerprint-tested).
+        self.ocs_txn = ocs_txn
+        self._txn_rng: Optional[random.Random] = (
+            random.Random(ocs_txn.seed ^ 0x0C51F7)
+            if ocs_txn is not None else None
+        )
+        self._active_txn: Optional[_CircuitTxn] = None
+        self.partial_migration = partial_migration
         self.failed_switches: Set[SwitchKey] = set()
         self.failed_links: Set[LinkId] = set()
         self._down_since: Dict[object, float] = {}   # entity -> fail time
@@ -339,40 +466,51 @@ class ClusterScheduler:
         trc = self.tracer
         if trc.enabled:
             trc.begin("ocs.apply", cat="ocs", switches=len(target))
+        txn = self._active_txn
         patches: List[SwitchPatch] = []
-        for key in sorted(target):
-            tgt = target[key]
-            refs = self._switch_refs.setdefault(key, {})
-            for c in tgt:
-                refs[c] = refs.get(c, 0) + 1
-            cur = self.circuits.get(key, frozenset())
-            remove: FrozenSet[Circuit] = frozenset()
-            orphans = self._orphans.get(key)
-            if orphans:
-                orphans -= tgt                      # reused verbatim: now live
-                out_ports = {pa for pa, _ in tgt}
-                in_ports = {pb for _, pb in tgt}
-                conflict = {
-                    c for c in orphans
-                    if c[0] in out_ports or c[1] in in_ports
-                }
-                if conflict:
-                    orphans -= conflict
-                    remove = frozenset(conflict)
-                    cur = cur - remove
-                if not orphans:
-                    del self._orphans[key]
-            add = tgt - cur
-            if add or remove:
-                patches.append(SwitchPatch(key, remove=remove, add=add))
-                new = cur | add
-                if new:
-                    if key not in self.circuits:
-                        self._line_add(key)
-                    self.circuits[key] = new
-                else:  # pragma: no cover - remove implies a prior add
-                    if self.circuits.pop(key, None) is not None:
-                        self._line_sub(key)
+        try:
+            for key in sorted(target):
+                if txn is not None:
+                    txn.snapshot(key)
+                tgt = target[key]
+                refs = self._switch_refs.setdefault(key, {})
+                for c in tgt:
+                    refs[c] = refs.get(c, 0) + 1
+                cur = self.circuits.get(key, frozenset())
+                remove: FrozenSet[Circuit] = frozenset()
+                orphans = self._orphans.get(key)
+                if orphans:
+                    orphans -= tgt                  # reused verbatim: now live
+                    out_ports = {pa for pa, _ in tgt}
+                    in_ports = {pb for _, pb in tgt}
+                    conflict = {
+                        c for c in orphans
+                        if c[0] in out_ports or c[1] in in_ports
+                    }
+                    if conflict:
+                        orphans -= conflict
+                        remove = frozenset(conflict)
+                        cur = cur - remove
+                    if not orphans:
+                        del self._orphans[key]
+                add = tgt - cur
+                if add or remove:
+                    patch = SwitchPatch(key, remove=remove, add=add)
+                    if txn is not None:
+                        txn.roll(patch)   # may abort before the key mutates
+                    patches.append(patch)
+                    new = cur | add
+                    if new:
+                        if key not in self.circuits:
+                            self._line_add(key)
+                        self.circuits[key] = new
+                    else:  # pragma: no cover - remove implies a prior add
+                        if self.circuits.pop(key, None) is not None:
+                            self._line_sub(key)
+        except _TxnAbort:
+            if trc.enabled:
+                trc.end("ocs.apply", patched=len(patches), aborted=True)
+            raise
         plan = ReconfigPlan(tuple(patches))
         dt = self._account(plan)
         if trc.enabled:
@@ -389,44 +527,55 @@ class ClusterScheduler:
         if trc.enabled:
             trc.begin("ocs.revert", cat="ocs", switches=len(target))
         lazy = self.gang_scoring
+        txn = self._active_txn
         patches: List[SwitchPatch] = []
-        for key in sorted(target):
-            tgt = target[key]
-            refs = self._switch_refs.setdefault(key, {})
-            dead = set()
-            for c in tgt:
-                left = refs.get(c, 0) - 1
-                if left > 0:
-                    refs[c] = left
+        try:
+            for key in sorted(target):
+                if txn is not None:
+                    txn.snapshot(key)
+                tgt = target[key]
+                refs = self._switch_refs.setdefault(key, {})
+                dead = set()
+                for c in tgt:
+                    left = refs.get(c, 0) - 1
+                    if left > 0:
+                        refs[c] = left
+                    else:
+                        refs.pop(c, None)
+                        dead.add(c)
+                if not refs:
+                    del self._switch_refs[key]
+                cur = self.circuits.get(key, frozenset())
+                remove = cur & frozenset(dead)
+                if not remove:
+                    continue
+                if key in self.failed_switches:
+                    # the switch is physically dead: its circuits are already
+                    # gone, so releasing them is free (no mirror stroke) and
+                    # orphaning them would be fiction
+                    left_circuits = cur - remove
+                    if left_circuits:
+                        self.circuits[key] = left_circuits
+                    elif self.circuits.pop(key, None) is not None:
+                        self._line_sub(key)
+                elif lazy:
+                    # leave the circuits programmed (no mirror strokes now);
+                    # track them as orphans for later reuse or eviction
+                    self._orphans.setdefault(key, set()).update(remove)
                 else:
-                    refs.pop(c, None)
-                    dead.add(c)
-            if not refs:
-                del self._switch_refs[key]
-            cur = self.circuits.get(key, frozenset())
-            remove = cur & frozenset(dead)
-            if not remove:
-                continue
-            if key in self.failed_switches:
-                # the switch is physically dead: its circuits are already
-                # gone, so releasing them is free (no mirror stroke) and
-                # orphaning them would be fiction
-                left_circuits = cur - remove
-                if left_circuits:
-                    self.circuits[key] = left_circuits
-                elif self.circuits.pop(key, None) is not None:
-                    self._line_sub(key)
-            elif lazy:
-                # leave the circuits programmed (no mirror strokes now);
-                # track them as orphans for later reuse or eviction
-                self._orphans.setdefault(key, set()).update(remove)
-            else:
-                patches.append(SwitchPatch(key, remove=remove, add=frozenset()))
-                left_circuits = cur - remove
-                if left_circuits:
-                    self.circuits[key] = left_circuits
-                elif self.circuits.pop(key, None) is not None:
-                    self._line_sub(key)
+                    patch = SwitchPatch(key, remove=remove, add=frozenset())
+                    if txn is not None:
+                        txn.roll(patch)   # may abort before the key mutates
+                    patches.append(patch)
+                    left_circuits = cur - remove
+                    if left_circuits:
+                        self.circuits[key] = left_circuits
+                    elif self.circuits.pop(key, None) is not None:
+                        self._line_sub(key)
+        except _TxnAbort:
+            if trc.enabled:
+                trc.end("ocs.revert", patched=len(patches), aborted=True)
+            raise
         plan = ReconfigPlan(tuple(patches))
         dt = self._account(plan)
         if trc.enabled:
@@ -437,6 +586,76 @@ class ClusterScheduler:
                 downtime_s=dt,
             )
         return plan, dt
+
+    def _txn_run(self, op: str, fn):
+        """Run ``fn`` (a closure over ``_install``/``_uninstall`` calls) as
+        one two-phase OCS transaction.  Returns ``(fn result, backoff_s)``
+        on commit — the backoff is the extra downtime accrued by retried
+        strokes, which the caller adds to the plan downtime — or ``None``
+        on abort, after rolling every touched switch back to its exact
+        pre-transaction state and charging the rollback mirror strokes."""
+        trc = self.tracer
+        txn = _CircuitTxn(self)
+        self._active_txn = txn
+        if trc.enabled:
+            trc.begin("ocs.txn_apply", cat="ocs", op=op)
+        try:
+            result = fn()
+        except _TxnAbort:
+            self._active_txn = None
+            rb_plan = ReconfigPlan(tuple(txn.committed)).inverted()
+            if trc.enabled:
+                with trc.span(
+                    "ocs.txn_rollback", cat="ocs", op=op,
+                    patched=len(rb_plan.patches),
+                    strokes=rb_plan.circuits_flipped,
+                ):
+                    txn.rollback()
+            else:
+                txn.rollback()
+            # undoing the committed patches is itself a reconfiguration
+            # round: charge its strokes and downtime on top of the backoff
+            # already paid on the failed retries
+            rb_dt = self.cost_model.downtime(rb_plan) if rb_plan.patches else 0.0
+            m = self.metrics
+            m.txn_rollbacks += 1
+            m.txn_retries += txn.retries
+            m.txn_retry_strokes += txn.retry_strokes
+            m.txn_rollback_strokes += rb_plan.circuits_flipped
+            if rb_plan.patches:
+                m.reconfig_rounds += 1
+                m.circuits_flipped += rb_plan.circuits_flipped
+            m.total_downtime_s += txn.backoff_s + rb_dt
+            if trc.enabled:
+                trc.end(
+                    "ocs.txn_apply", committed=False, retries=txn.retries
+                )
+            return None
+        self._active_txn = None
+        m = self.metrics
+        m.txn_commits += 1
+        m.txn_retries += txn.retries
+        m.txn_retry_strokes += txn.retry_strokes
+        m.total_downtime_s += txn.backoff_s
+        if trc.enabled:
+            trc.end("ocs.txn_apply", committed=True, retries=txn.retries)
+        return result, txn.backoff_s
+
+    def _install_checked(
+        self, target: CircuitMap
+    ) -> Optional[Tuple[ReconfigPlan, float]]:
+        """``_install``, transactionally when ``ocs_txn`` is configured:
+        returns the (plan, downtime-including-backoff) pair, or ``None``
+        when the transaction aborted and the circuit state was rolled
+        back (the caller demotes — e.g. a placement fails and the job
+        backlogs for the next capacity event)."""
+        if self.ocs_txn is None:
+            return self._install(target)
+        res = self._txn_run("install", lambda: self._install(target))
+        if res is None:
+            return None
+        (plan, dt), backoff = res
+        return plan, dt + backoff
 
     # -- placement ----------------------------------------------------------
 
@@ -536,7 +755,13 @@ class ClusterScheduler:
                 if res is None:
                     return False
                 target, factor = res
-        _, downtime = self._install(target)
+        inst = self._install_checked(target)
+        if inst is None:
+            # install transaction aborted: circuits rolled back to the
+            # pre-attempt state, the placement fails, and the job demotes
+            # (backlog, or the caller's next recovery-ladder rung)
+            return False
+        _, downtime = inst
         if self.goodput_model == "flow":
             if trc.enabled:
                 with trc.span("goodput.estimate", cat="flow", job=job.job_id) as gsp:
@@ -886,14 +1111,18 @@ class ClusterScheduler:
 
     # -- switch / link faults (circuit repair before the ladder) ------------
 
-    def _repatch(self, rj: RunningJob, new_target: CircuitMap) -> float:
+    def _repatch(
+        self, rj: RunningJob, new_target: CircuitMap
+    ) -> Optional[float]:
         """Swap a running job's circuits in place, touching only what
         changed: per switch key, release circuits the new target drops
         (free on dead switches — the hardware already dropped them) and
         program the additions.  Surviving rails keep their circuits and
         cost zero strokes, which is why in-place repair beats the
         evict-and-replace path (``bench_chaos`` records the comparison).
-        Downtime is the sum of both rounds."""
+        Returns the summed downtime of both rounds — or ``None`` when
+        ``ocs_txn`` is configured and the transaction (both legs run as
+        one) aborted, leaving the job's old circuits fully intact."""
         old = rj.circuits
         removed: CircuitMap = {}
         added: CircuitMap = {}
@@ -904,10 +1133,20 @@ class ClusterScheduler:
                 removed[key] = before - after
             if after - before:
                 added[key] = after - before
-        _, dt1 = self._uninstall(removed)
-        _, dt2 = self._install(added)
+        if self.ocs_txn is None:
+            _, dt1 = self._uninstall(removed)
+            _, dt2 = self._install(added)
+            rj.circuits = new_target
+            return dt1 + dt2
+        res = self._txn_run(
+            "repatch",
+            lambda: (self._uninstall(removed), self._install(added)),
+        )
+        if res is None:
+            return None
+        ((_, dt1), (_, dt2)), backoff = res
         rj.circuits = new_target
-        return dt1 + dt2
+        return dt1 + dt2 + backoff
 
     def _retime(self, rj: RunningJob, t: float, downtime: float, factor: float) -> None:
         """Re-time a repaired job: close the current segment with the work
@@ -934,11 +1173,18 @@ class ClusterScheduler:
         )
 
     def _repair_or_ladder(self, rj: RunningJob, t: float) -> None:
-        """First rung of the fault response for a job whose circuits hit a
-        dead switch/transceiver: re-synthesize over the surviving rails in
-        place (``faults.synthesize_degraded``); only when the fault set is
-        irreparable for this job does it pay an eviction and enter the
-        migrate -> shrink -> requeue ladder."""
+        """Fault response for a running job whose circuits hit a dead
+        switch/transceiver — the switch/link entry point of the recovery
+        ladder (rung order and gating flags in the module docstring):
+
+        1. repair in place (``circuit_repair``);
+        2. partial-migrate the dead lines (``partial_migration``);
+        3. evict and fall through to migrate -> shrink -> requeue.
+
+        A repair whose repatch transaction aborts demotes to rung 2 just
+        like an irreparable fault set (its circuits rolled back to the
+        pre-repair state, which still avoids the dead hardware for every
+        surviving rail — the job simply keeps paying its degradation)."""
         rec = self.metrics.records[rj.job.job_id]
         if self.circuit_repair:
             res = synthesize_degraded(
@@ -957,16 +1203,113 @@ class ClusterScheduler:
                         job=rj.job.job_id, factor=factor,
                     ) as sp:
                         downtime = self._repatch(rj, new_target)
-                        sp.set(downtime_s=downtime)
+                        sp.set(
+                            downtime_s=downtime, aborted=downtime is None
+                        )
                 else:
                     downtime = self._repatch(rj, new_target)
-                self._retime(rj, t, downtime, factor)
-                self.metrics.repairs += 1
-                rec.repairs += 1
-                return
+                if downtime is not None:
+                    self._retime(rj, t, downtime, factor)
+                    self.metrics.repairs += 1
+                    rec.repairs += 1
+                    return
+        if self.partial_migration and self._partial_migrate(rj, t):
+            return
         self.metrics.repair_fallbacks += 1
         remaining = self._evict(rj, t, lossy=True)
         self._recover_ladder(rj.job, remaining, t)
+
+    def _partial_migrate(self, rj: RunningJob, t: float) -> bool:
+        """Partial-migration rung: move only the allocation rows/columns
+        whose rails are irreparably dead, keeping every surviving line —
+        and the circuits already programmed on it — pinned in place.
+
+        Replacement lines come from ``placement.partial_refit`` (a
+        minimal sub-allocation diff against the occupancy index), and the
+        circuit swap is one repatch (transactional under ``ocs_txn``), so
+        mirror strokes are paid only on switches whose membership
+        actually changed; ``bench_chaos`` records the stroke comparison
+        against a full migrate.  The move is checkpoint-lossy exactly
+        like a failure-driven eviction.  Returns False — scheduler state
+        untouched — when no line is irreparable for this job, no
+        replacement lines exist, the degraded re-synthesis cannot cover
+        the new rectangle, or the repatch transaction aborts."""
+        bad_rows, bad_cols = irreparable_lines(
+            self.cfg, rj.jmap.mapping, rj.alloc,
+            frozenset(self.failed_switches),
+            frozenset(self.failed_links),
+        )
+        if not bad_rows and not bad_cols:
+            return False
+        new_alloc = partial_refit(
+            self.n, self._occ, rj.alloc, bad_rows, bad_cols
+        )
+        if new_alloc is None:
+            return False
+        target = self._circuit_cache.target_for(rj.jmap.mapping, new_alloc)
+        factor = 1.0
+        if faults_hit_target(target, self.failed_switches, self.failed_links):
+            res = synthesize_degraded(
+                self.cfg, rj.jmap.mapping, new_alloc,
+                frozenset(self.failed_switches),
+                frozenset(self.failed_links),
+            )
+            if res is None:
+                return False
+            target, factor = res
+        if self.validate_circuits:
+            _check_port_discipline(self.cfg, target)
+        # checkpoint loss model, same as a lossy eviction — computed up
+        # front, but metrics mutate only after the repatch commits
+        elapsed = max(0.0, t - rj.resumed_t)
+        executed = min(rj.remaining_work_s, elapsed * rj.goodput)
+        kept = executed
+        interval = self.checkpoint_interval_s
+        if interval is not None and interval > 0:
+            kept = min(
+                executed, math.floor(elapsed / interval) * interval * rj.goodput
+            )
+        trc = self.tracer
+        if trc.enabled:
+            with trc.span(
+                "fault.partial_migrate", cat="fault",
+                job=rj.job.job_id, factor=factor,
+                moved_rows=len(bad_rows), moved_cols=len(bad_cols),
+            ) as sp:
+                downtime = self._repatch(rj, target)
+                sp.set(downtime_s=downtime, aborted=downtime is None)
+        else:
+            downtime = self._repatch(rj, target)
+        if downtime is None:
+            return False             # txn aborted: fall to the next rung
+        lost = executed - kept
+        if lost > 0:
+            self.metrics.lost_work_s += lost
+            self.metrics.records[rj.job.job_id].lost_work_s += lost
+        old_alloc = rj.alloc
+        self._occ.release(old_alloc.rows, old_alloc.cols)
+        self._occ.occupy(new_alloc.rows, new_alloc.cols)
+        # footprint size is unchanged, so the occupied counter stands
+        self._close_segment(rj, kept)
+        rj.remaining_work_s -= kept
+        rj.alloc = new_alloc
+        g = rj.base_goodput * factor
+        rj.goodput = g
+        rj.degradation = factor
+        rj.resumed_t = t + downtime
+        epoch = self._segment.get(rj.job.job_id, 0) + 1
+        self._segment[rj.job.job_id] = epoch
+        rj.epoch = epoch
+        rj.expected_finish = t + downtime + rj.remaining_work_s / g
+        rec = self.metrics.records[rj.job.job_id]
+        rec.goodput = g
+        rec.reconfig_downtime_s += downtime
+        rec.partial_migrations += 1
+        self.metrics.partial_migrations += 1
+        self._queue.push(
+            JobFinish(time=rj.expected_finish, job_id=rj.job.job_id, epoch=epoch)
+        )
+        return True
 
     def _heal_running(self, t: float) -> None:
         """After a switch/link restore, re-synthesize every degraded job
@@ -994,9 +1337,13 @@ class ClusterScheduler:
                     "fault.restore", cat="fault", job=jid, factor=factor
                 ) as sp:
                     downtime = self._repatch(rj, new_target)
-                    sp.set(downtime_s=downtime)
+                    sp.set(downtime_s=downtime, aborted=downtime is None)
             else:
                 downtime = self._repatch(rj, new_target)
+            if downtime is None:
+                # heal transaction aborted: the job keeps running on its
+                # (valid) degraded circuits; a later restore retries
+                continue
             self._retime(rj, t, downtime, factor)
             self.metrics.repairs += 1
             self.metrics.records[jid].repairs += 1
@@ -1035,6 +1382,8 @@ class ClusterScheduler:
         self.failed_links.add(link)
         self.metrics.link_faults += 1
         self._down_since.setdefault(("link", link), ev.time)
+        if self._flaps is not None:
+            self._flaps.record_fail(("link", link))
         self._occ.touch()
         victims = sorted(
             (
@@ -1106,6 +1455,18 @@ class ClusterScheduler:
     def _handle_link_recover(self, ev: LinkRecover) -> None:
         if ev.link not in self.failed_links:
             return
+        if self._flaps is not None:
+            q = self._flaps.quarantine_s(("link", ev.link))
+            if q is not None:
+                # flapping transceiver: burn it in before reprogramming
+                # circuits over it (same policy as nodes and switches)
+                self.metrics.quarantines += 1
+                self._queue.push(
+                    QuarantineRelease(
+                        time=ev.time + q, kind="link", link=ev.link
+                    )
+                )
+                return
         self._restore_link(ev.link, ev.time)
 
     def _handle_quarantine_release(self, ev: QuarantineRelease) -> None:
@@ -1121,6 +1482,11 @@ class ClusterScheduler:
                 self._flaps.release(("switch", ev.switch))
             if ev.switch in self.failed_switches:
                 self._restore_switch(ev.switch, ev.time)
+        elif ev.kind == "link" and ev.link is not None:
+            if self._flaps is not None:
+                self._flaps.release(("link", ev.link))
+            if ev.link in self.failed_links:
+                self._restore_link(ev.link, ev.time)
 
     # -- event loop ---------------------------------------------------------
 

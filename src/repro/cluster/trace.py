@@ -18,7 +18,9 @@ materializing the intermediate list.
 from __future__ import annotations
 
 import bisect
+import dataclasses
 import heapq
+import math
 import random
 from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
@@ -363,3 +365,159 @@ def replay_trace(events: Iterable[Event]) -> List[Event]:
     """Normalize an arbitrary event collection into time order (the
     scheduler's queue re-sorts anyway; this keeps traces inspectable)."""
     return sorted(events, key=lambda e: e.time)
+
+
+# ---------------------------------------------------------------------------
+# Trace-driven chaos replay (recorded / Weibull availability traces)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityRecord:
+    """One recorded down-up interval of one entity, as an availability
+    log would store it (fleet telemetry rather than a stochastic model).
+
+    ``kind`` is ``node`` / ``switch`` / ``link``; ``entity`` the matching
+    identifier (a ``(r, c)`` coord, a ``(dim, group, rail)`` switch key,
+    or a ``(node, dim, rail)`` link id).  ``up_t=None`` records an entity
+    that never came back inside the log window."""
+
+    kind: str
+    entity: object
+    down_t: float
+    up_t: Optional[float] = None
+
+
+def replay_availability_trace(
+    records: Sequence[AvailabilityRecord],
+) -> List[Event]:
+    """Deterministically expand recorded down-up intervals into the
+    scheduler's fail/recover event stream (time-sorted, input order
+    preserved among simultaneous events — replaying the same records
+    always yields the identical list, which is what lets ``bench_chaos``
+    assert byte-exact replay fidelity on recorded scenarios).
+
+    Raises ``ValueError`` when two intervals of the same entity overlap
+    (a log corruption the memoryless generators can never produce: an
+    entity cannot fail again before it was repaired)."""
+    by_entity: Dict[Tuple[str, object], List[AvailabilityRecord]] = {}
+    for rec in records:
+        by_entity.setdefault((rec.kind, rec.entity), []).append(rec)
+    for (kind, ent), recs in by_entity.items():
+        ordered = sorted(recs, key=lambda r: r.down_t)
+        for a, b in zip(ordered, ordered[1:]):
+            if a.up_t is None or b.down_t < a.up_t:
+                raise ValueError(
+                    f"overlapping availability intervals for {kind} {ent!r}: "
+                    f"down at {b.down_t} before repair of the interval "
+                    f"starting {a.down_t}"
+                )
+    events: List[Event] = []
+    for rec in records:
+        if rec.kind == "node":
+            events.append(NodeFail(time=rec.down_t, node=rec.entity))
+            if rec.up_t is not None:
+                events.append(NodeRecover(time=rec.up_t, node=rec.entity))
+        elif rec.kind == "switch":
+            events.append(SwitchFail(time=rec.down_t, switch=rec.entity))
+            if rec.up_t is not None:
+                events.append(SwitchRecover(time=rec.up_t, switch=rec.entity))
+        elif rec.kind == "link":
+            node, dim, rail = rec.entity
+            events.append(
+                LinkFail(time=rec.down_t, node=node, dim=dim, rail=rail)
+            )
+            if rec.up_t is not None:
+                events.append(
+                    LinkRecover(time=rec.up_t, node=node, dim=dim, rail=rail)
+                )
+        else:
+            raise ValueError(f"unknown availability record kind {rec.kind!r}")
+    return replay_trace(events)
+
+
+def generate_weibull_records(
+    *,
+    n: int,
+    rails: int = 16,
+    seed: int = 0,
+    duration_s: float = 8 * 3600.0,
+    mtbf_node_s: float = 0.0,
+    mtbf_switch_s: float = 0.0,
+    mtbf_link_s: float = 0.0,
+    mttr_s: float = 1800.0,
+    shape: float = 1.6,
+    burst_mean: float = 2.0,
+) -> List[AvailabilityRecord]:
+    """Synthesize an availability log with non-Poisson statistics: burst
+    arrivals with Weibull-shaped inter-burst gaps.
+
+    ``shape > 1`` models aging hardware (increasing hazard — failures
+    cluster later in the window), ``shape < 1`` infant mortality; the
+    Weibull scale is chosen so the *mean* cluster-level inter-burst gap
+    still equals ``mtbf / entities``, making rows comparable with the
+    exponential scenarios at equal budgets.  Each burst downs a
+    geometrically-sized batch (mean ``burst_mean``) of distinct up
+    entities of one kind with a shared repair instant — the correlated
+    batch-maintenance pattern that memoryless per-entity traces cannot
+    express.  A zero MTBF disables that kind.  Pure function of its
+    arguments; feed the result to :func:`replay_availability_trace`.
+    """
+    doms = [
+        ("node", n * n, mtbf_node_s),
+        ("switch", 2 * n * rails, mtbf_switch_s),
+        ("link", 2 * n * n * rails, mtbf_link_s),
+    ]
+    doms = [(k, ents, mtbf) for k, ents, mtbf in doms if mtbf > 0]
+    if not doms:
+        return []
+    rng = random.Random(seed ^ 0x5DEECE66D)
+    # mean of Weibull(scale a, shape b) is a * Gamma(1 + 1/b): divide it
+    # back out so the configured MTBF stays the realized mean
+    gamma_corr = math.gamma(1.0 + 1.0 / shape)
+
+    def node_entity(nid: int) -> Tuple[int, int]:
+        return (nid // n, nid % n)
+
+    def switch_entity(sid: int) -> Tuple[str, int, int]:
+        dim_i, rest = divmod(sid, n * rails)
+        group, rail = divmod(rest, rails)
+        return ("X" if dim_i == 0 else "Y", group, rail)
+
+    def link_entity(lid: int) -> Tuple[Tuple[int, int], str, int]:
+        rest, rail = divmod(lid, rails)
+        nid, dim_i = divmod(rest, 2)
+        return (node_entity(nid), "X" if dim_i == 0 else "Y", rail)
+
+    to_entity = {
+        "node": node_entity, "switch": switch_entity, "link": link_entity,
+    }
+    records: List[AvailabilityRecord] = []
+    p_more = 1.0 - 1.0 / max(1.0, burst_mean)
+    for kind, entities, mtbf in doms:
+        scale = (mtbf / entities) / gamma_corr
+        up: List[int] = list(range(entities))
+        repairs: List[Tuple[float, int]] = []   # (up time, entity id)
+        t = 0.0
+        while True:
+            t += rng.weibullvariate(scale, shape)
+            if t >= duration_s:
+                break
+            while repairs and repairs[0][0] <= t:
+                _, eid = heapq.heappop(repairs)
+                bisect.insort(up, eid)
+            batch = 1
+            while rng.random() < p_more:
+                batch += 1
+            up_t = t + max(60.0, rng.expovariate(1.0 / mttr_s))
+            for _ in range(min(batch, len(up))):
+                eid = up.pop(rng.randrange(len(up)))
+                records.append(
+                    AvailabilityRecord(
+                        kind=kind, entity=to_entity[kind](eid),
+                        down_t=t, up_t=up_t,
+                    )
+                )
+                heapq.heappush(repairs, (up_t, eid))
+    records.sort(key=lambda r: (r.down_t, r.kind, repr(r.entity)))
+    return records

@@ -41,10 +41,13 @@ KNOWN_SPANS: Dict[str, Tuple[str, ...]] = {
         "ocs.apply",
         "ocs.revert",
         "ocs.synthesize",
+        "ocs.txn_apply",         # two-phase transactional apply (TxnConfig)
+        "ocs.txn_rollback",      # retry-exhausted txn undoing its patches
     ),
     "fault": (
         "fault.repair",          # in-place degraded re-synthesis succeeded
         "fault.restore",         # healed rails reprogrammed after a recover
+        "fault.partial_migrate", # dead-line-only move (ladder rung 2)
     ),
     "flow": (
         "goodput.estimate",
