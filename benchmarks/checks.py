@@ -541,6 +541,9 @@ def run_table(
     failed = 0
     with tracing(tracer):
         for check in checks:
+            # bench driver owns an always-enabled local tracer; span names
+            # mirror check names, deliberately outside the production catalog
+            # lint: allow[trace-unknown-span,trace-unguarded-args]
             with tracer.span("check." + check.name, cat="check"):
                 row, failures = run_check(check, tracer)
             wall = row.get(check.wall_key)

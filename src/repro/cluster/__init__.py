@@ -111,6 +111,7 @@ from .reconfig import (
 from .scheduler import ClusterScheduler
 from .trace import (
     AvailabilityRecord,
+    dump_availability_records,
     fault_domain_trace,
     fig20_trace,
     failure_trace,
@@ -118,9 +119,11 @@ from .trace import (
     iter_failure_trace,
     iter_fault_domain_trace,
     iter_poisson_trace,
+    load_availability_records,
     poisson_trace,
     replay_availability_trace,
     replay_trace,
+    validate_availability_records,
 )
 
 __all__ = [
@@ -159,6 +162,7 @@ __all__ = [
     "canonical_allocation",
     "default_plan",
     "diff_circuits",
+    "dump_availability_records",
     "estimate_goodput",
     "failure_trace",
     "fault_domain_trace",
@@ -173,6 +177,7 @@ __all__ = [
     "iter_poisson_trace",
     "job_target_circuits",
     "link_hits_circuits",
+    "load_availability_records",
     "synthesize_degraded",
     "make_job",
     "model_spec_from_config",
@@ -183,5 +188,6 @@ __all__ = [
     "relabel_circuits",
     "replay_availability_trace",
     "replay_trace",
+    "validate_availability_records",
     "validate_job_reconfig",
 ]

@@ -268,6 +268,9 @@ class ClusterScheduler:
         policy: str = "best_fit",
         cost_model: Optional[ReconfigCostModel] = None,
         goodput_model: Literal["flow", "none"] = "flow",
+        # invariant checking, not behavior: validation never alters
+        # scheduling decisions, only raises on bugs
+        # lint: allow[flag-default-on]
         validate_circuits: bool = True,
         preemption: bool = False,
         gang_scoring: bool = False,
@@ -275,6 +278,9 @@ class ClusterScheduler:
         tracer=None,
         registry: Optional[MetricsRegistry] = None,
         fabric: str = "railx-hyperx",
+        # inert without fault events: the repair rung only runs when a
+        # failure record arrives
+        # lint: allow[flag-default-on]
         circuit_repair: bool = True,
         checkpoint_interval_s: Optional[float] = None,
         quarantine: Optional[QuarantineConfig] = None,

@@ -18,8 +18,10 @@ materializing the intermediate list.
 from __future__ import annotations
 
 import bisect
+import csv
 import dataclasses
 import heapq
+import json
 import math
 import random
 from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
@@ -388,6 +390,44 @@ class AvailabilityRecord:
     up_t: Optional[float] = None
 
 
+_RECORD_KINDS = ("node", "switch", "link")
+
+
+def validate_availability_records(
+    records: Sequence[AvailabilityRecord],
+) -> None:
+    """Reject malformed availability logs: unknown kinds, inverted
+    intervals, and overlapping intervals of the same entity (an entity
+    cannot fail again before it was repaired).  Shared by the replayer
+    and the file loader so recorded and ingested traces meet one bar."""
+    by_entity: Dict[Tuple[str, object], List[AvailabilityRecord]] = {}
+    for rec in records:
+        if rec.kind not in _RECORD_KINDS:
+            raise ValueError(
+                f"unknown availability record kind {rec.kind!r} "
+                f"(expected one of {_RECORD_KINDS})"
+            )
+        if rec.up_t is not None and rec.up_t < rec.down_t:
+            raise ValueError(
+                f"inverted availability interval for {rec.kind} "
+                f"{rec.entity!r}: up at {rec.up_t} before down at "
+                f"{rec.down_t}"
+            )
+        by_entity.setdefault((rec.kind, rec.entity), []).append(rec)
+    # sorted so the first-reported error is independent of input order
+    for (kind, ent), recs in sorted(
+        by_entity.items(), key=lambda kv: (kv[0][0], repr(kv[0][1]))
+    ):
+        ordered = sorted(recs, key=lambda r: r.down_t)
+        for a, b in zip(ordered, ordered[1:]):
+            if a.up_t is None or b.down_t < a.up_t:
+                raise ValueError(
+                    f"overlapping availability intervals for {kind} {ent!r}: "
+                    f"down at {b.down_t} before repair of the interval "
+                    f"starting {a.down_t}"
+                )
+
+
 def replay_availability_trace(
     records: Sequence[AvailabilityRecord],
 ) -> List[Event]:
@@ -400,18 +440,7 @@ def replay_availability_trace(
     Raises ``ValueError`` when two intervals of the same entity overlap
     (a log corruption the memoryless generators can never produce: an
     entity cannot fail again before it was repaired)."""
-    by_entity: Dict[Tuple[str, object], List[AvailabilityRecord]] = {}
-    for rec in records:
-        by_entity.setdefault((rec.kind, rec.entity), []).append(rec)
-    for (kind, ent), recs in by_entity.items():
-        ordered = sorted(recs, key=lambda r: r.down_t)
-        for a, b in zip(ordered, ordered[1:]):
-            if a.up_t is None or b.down_t < a.up_t:
-                raise ValueError(
-                    f"overlapping availability intervals for {kind} {ent!r}: "
-                    f"down at {b.down_t} before repair of the interval "
-                    f"starting {a.down_t}"
-                )
+    validate_availability_records(records)
     events: List[Event] = []
     for rec in records:
         if rec.kind == "node":
@@ -434,6 +463,108 @@ def replay_availability_trace(
         else:
             raise ValueError(f"unknown availability record kind {rec.kind!r}")
     return replay_trace(events)
+
+
+def dump_availability_records(
+    records: Sequence[AvailabilityRecord], path
+) -> None:
+    """Write an availability log to ``path``: CSV for ``*.csv`` (header
+    ``kind,entity,down_t,up_t``; the entity encoded as compact JSON, an
+    empty ``up_t`` for never-repaired), JSON Lines otherwise.  Floats
+    use their shortest round-trippable form, so dump → load → replay is
+    byte-identical to replaying the in-memory records."""
+    path = str(path)
+    if path.endswith(".csv"):
+        with open(path, "w", newline="") as f:
+            writer = csv.writer(f)
+            writer.writerow(["kind", "entity", "down_t", "up_t"])
+            for rec in records:
+                writer.writerow([
+                    rec.kind,
+                    json.dumps(rec.entity, separators=(",", ":")),
+                    repr(float(rec.down_t)),
+                    "" if rec.up_t is None else repr(float(rec.up_t)),
+                ])
+    else:
+        with open(path, "w") as f:
+            for rec in records:
+                f.write(json.dumps(
+                    {
+                        "kind": rec.kind,
+                        "entity": rec.entity,
+                        "down_t": rec.down_t,
+                        "up_t": rec.up_t,
+                    },
+                    separators=(",", ":"),
+                ))
+                f.write("\n")
+
+
+def _entity_from_json(obj):
+    """JSON arrays back to the tuples the events/faults layers key on
+    (``(r, c)`` coords, ``(dim, group, rail)`` switch keys, nested link
+    ids)."""
+    if isinstance(obj, list):
+        return tuple(_entity_from_json(x) for x in obj)
+    return obj
+
+
+def load_availability_records(path) -> List[AvailabilityRecord]:
+    """Read an availability log written by
+    :func:`dump_availability_records` (or fleet telemetry exported in
+    the same shape): CSV for ``*.csv``, JSON Lines otherwise.  Entities
+    come back as tuples, the stream is validated with
+    :func:`validate_availability_records`, and malformed rows raise
+    ``ValueError`` naming the offending line."""
+    path = str(path)
+    records: List[AvailabilityRecord] = []
+    if path.endswith(".csv"):
+        with open(path, newline="") as f:
+            reader = csv.DictReader(f)
+            required = {"kind", "entity", "down_t", "up_t"}
+            if reader.fieldnames is None or not required.issubset(
+                reader.fieldnames
+            ):
+                raise ValueError(
+                    f"{path}: expected CSV header kind,entity,down_t,up_t "
+                    f"(got {reader.fieldnames})"
+                )
+            for lineno, row in enumerate(reader, start=2):
+                try:
+                    records.append(AvailabilityRecord(
+                        kind=row["kind"],
+                        entity=_entity_from_json(json.loads(row["entity"])),
+                        down_t=float(row["down_t"]),
+                        up_t=float(row["up_t"]) if row["up_t"] else None,
+                    ))
+                except (ValueError, TypeError, KeyError) as e:
+                    raise ValueError(
+                        f"{path}:{lineno}: malformed availability row: {e}"
+                    ) from e
+    else:
+        with open(path) as f:
+            for lineno, line in enumerate(f, start=1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    obj = json.loads(line)
+                    records.append(AvailabilityRecord(
+                        kind=obj["kind"],
+                        entity=_entity_from_json(obj["entity"]),
+                        down_t=float(obj["down_t"]),
+                        up_t=(
+                            float(obj["up_t"])
+                            if obj.get("up_t") is not None else None
+                        ),
+                    ))
+                except (ValueError, TypeError, KeyError) as e:
+                    raise ValueError(
+                        f"{path}:{lineno}: malformed availability record: "
+                        f"{e}"
+                    ) from e
+    validate_availability_records(records)
+    return records
 
 
 def generate_weibull_records(

@@ -54,8 +54,6 @@ def max_single_allocation(n: int, faults: Sequence[Coord]) -> int:
         return (n - max(r, c)) * (n - min(r, c))
 
     best = 0
-    uniq_rows = list({f[0] for f in clustered})
-    uniq_cols = list({f[1] for f in clustered})
     for choice in itertools.product((0, 1), repeat=len(clustered)):
         dis_rows: Set[int] = set()
         dis_cols: Set[int] = set()
@@ -228,7 +226,7 @@ def allocate_multi_jobs(
     freely, Figure 20).  Thin wrapper over the bitmask core."""
     full = (1 << n) - 1
     masks = [full] * n
-    for r, c in set(faults):
+    for r, c in faults:  # mask-clear is idempotent; no dedup needed
         masks[r] &= ~(1 << c)
     return allocate_multi_jobs_masks(n, masks, max_jobs=max_jobs)
 

@@ -137,7 +137,7 @@ def run_cell(
     zoo = get_model(cfg)
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(list(mesh.shape.values())))
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     batch_sds = input_specs(cfg, shape)
     params_sds = jax.eval_shape(lambda: zoo.init(jax.random.PRNGKey(0)))
@@ -186,9 +186,9 @@ def run_cell(
             model_flops = roofline.model_decode_flops(cfg.active_param_count(), tokens)
         default_trip = cfg.num_layers
 
-    t_lower = time.time() - t0
+    t_lower = time.perf_counter() - t0
     compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_compile = time.perf_counter() - t0 - t_lower
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis()
     if isinstance(ca, (list, tuple)):
@@ -252,7 +252,7 @@ def main() -> None:
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
-                t0 = time.time()
+                t0 = time.perf_counter()
                 try:
                     res = run_cell(
                         arch, shape, multi_pod=mp,
@@ -287,7 +287,7 @@ def main() -> None:
                 elif status == "FAIL":
                     extra = " " + res["error"][:120]
                 print(
-                    f"[{status}] {res['cell']} ({time.time()-t0:.0f}s){extra}",
+                    f"[{status}] {res['cell']} ({time.perf_counter()-t0:.0f}s){extra}",
                     flush=True,
                 )
     if failures:

@@ -25,6 +25,7 @@ instead, so both clocks are visible in the viewer.
 from __future__ import annotations
 
 import json
+import threading
 import time
 from typing import Callable, Dict, IO, List, Optional, Tuple, Union
 
@@ -114,11 +115,15 @@ class _Span:
 class Tracer:
     """Structured trace recorder (Chrome trace-event JSON).
 
-    Single-threaded by design (the simulator and scheduler are): all
-    events carry ``pid=1, tid=1`` and one open-span stack suffices for
-    B/E matching.  ``registry`` optionally mirrors every closed span
-    into a histogram named ``span.<name>`` (microseconds), wiring the
-    trace layer into the metrics registry.
+    Thread-aware: every thread that emits through the tracer gets its
+    own ``tid`` (the constructing thread is ``tid=1``) and its own
+    open-span stack, so worker-thread spans land on separate Perfetto
+    tracks and B/E matching stays per-thread.  One lock serializes
+    timestamp acquisition with the event append, so the global event
+    list is ordered exactly by ``ts`` even under concurrent emission.
+    ``registry`` optionally mirrors every closed span into a histogram
+    named ``span.<name>`` (microseconds), wiring the trace layer into
+    the metrics registry.
     """
 
     enabled = True
@@ -134,63 +139,91 @@ class Tracer:
         self.registry = registry
         self._clock_ns = clock_ns or time.perf_counter_ns
         self._t0 = self._clock_ns()
-        self._stack: List[Tuple[str, float]] = []
+        self._lock = threading.Lock()
+        self._tls = threading.local()
+        self._next_tid = 1
+        self._thread_names: Dict[int, str] = {}
         # per-phase (span name) totals: name -> [count, total_us]
         self._phase: Dict[str, List[float]] = {}
+        # the constructing thread claims tid 1
+        self._thread_state()
 
-    # -- clock --------------------------------------------------------------
+    # -- clock / thread identity --------------------------------------------
 
     def _ts(self) -> float:
         """Microseconds since tracer construction (monotonic)."""
         return (self._clock_ns() - self._t0) / 1e3
 
+    def _thread_state(self) -> Tuple[int, List[Tuple[str, float]]]:
+        """(tid, open-span stack) of the calling thread, allocating a
+        fresh tid on this thread's first emission."""
+        tls = self._tls
+        try:
+            return tls.tid, tls.stack
+        except AttributeError:
+            with self._lock:
+                tid = self._next_tid
+                self._next_tid += 1
+                self._thread_names[tid] = threading.current_thread().name
+            tls.tid = tid
+            tls.stack = []
+            return tid, tls.stack
+
     # -- event emission -----------------------------------------------------
 
     def begin(self, name: str, cat: str = "repro", **args) -> None:
-        ts = self._ts()
-        self._stack.append((name, ts))
-        self.events.append({
-            "name": name, "cat": cat, "ph": "B", "ts": ts,
-            "pid": 1, "tid": 1, "args": args,
-        })
+        tid, stack = self._thread_state()
+        with self._lock:
+            ts = self._ts()
+            stack.append((name, ts))
+            self.events.append({
+                "name": name, "cat": cat, "ph": "B", "ts": ts,
+                "pid": 1, "tid": tid, "args": args,
+            })
 
     def end(self, name: str, **args) -> None:
-        ts = self._ts()
-        if not self._stack or self._stack[-1][0] != name:
+        tid, stack = self._thread_state()
+        if not stack or stack[-1][0] != name:
             raise ValueError(
                 f"unmatched span end {name!r} (open: "
-                f"{[n for n, _ in self._stack]!r})"
+                f"{[n for n, _ in stack]!r})"
             )
-        _, t_begin = self._stack.pop()
-        dur = ts - t_begin
-        phase = self._phase.get(name)
-        if phase is None:
-            self._phase[name] = [1, dur]
-        else:
-            phase[0] += 1
-            phase[1] += dur
-        if self.registry is not None:
-            self.registry.histogram(f"span.{name}").observe(dur)
-        self.events.append({
-            "name": name, "ph": "E", "ts": ts,
-            "pid": 1, "tid": 1, "args": args,
-        })
+        with self._lock:
+            ts = self._ts()
+            _, t_begin = stack.pop()
+            dur = ts - t_begin
+            phase = self._phase.get(name)
+            if phase is None:
+                self._phase[name] = [1, dur]
+            else:
+                phase[0] += 1
+                phase[1] += dur
+            if self.registry is not None:
+                self.registry.histogram(f"span.{name}").observe(dur)
+            self.events.append({
+                "name": name, "ph": "E", "ts": ts,
+                "pid": 1, "tid": tid, "args": args,
+            })
 
     def span(self, name: str, cat: str = "repro", **args) -> _Span:
         self.begin(name, cat=cat, **args)
         return _Span(self, name)
 
     def instant(self, name: str, cat: str = "repro", **args) -> None:
-        self.events.append({
-            "name": name, "cat": cat, "ph": "i", "ts": self._ts(),
-            "pid": 1, "tid": 1, "s": "t", "args": args,
-        })
+        tid, _ = self._thread_state()
+        with self._lock:
+            self.events.append({
+                "name": name, "cat": cat, "ph": "i", "ts": self._ts(),
+                "pid": 1, "tid": tid, "s": "t", "args": args,
+            })
 
     def counter(self, name: str, **values) -> None:
-        self.events.append({
-            "name": name, "cat": "counter", "ph": "C", "ts": self._ts(),
-            "pid": 1, "tid": 1, "args": values,
-        })
+        tid, _ = self._thread_state()
+        with self._lock:
+            self.events.append({
+                "name": name, "cat": "counter", "ph": "C", "ts": self._ts(),
+                "pid": 1, "tid": tid, "args": values,
+            })
 
     # -- aggregation / output -----------------------------------------------
 
@@ -212,10 +245,15 @@ class Tracer:
 
     def to_dict(self) -> Dict[str, object]:
         """The Chrome trace-event JSON object (Perfetto-loadable)."""
-        meta = [{
+        meta: List[Dict[str, object]] = [{
             "name": "process_name", "ph": "M", "pid": 1, "tid": 1, "ts": 0,
             "args": {"name": self.process},
         }]
+        for tid, tname in sorted(self._thread_names.items()):
+            meta.append({
+                "name": "thread_name", "ph": "M", "pid": 1, "tid": tid,
+                "ts": 0, "args": {"name": tname},
+            })
         return {
             "traceEvents": meta + self.events,
             "displayTimeUnit": "ms",

@@ -1,0 +1,535 @@
+"""repro-lint fixture tests (ISSUE 9).
+
+Every rule gets a positive fixture (fires on the violating snippet) and
+a negative fixture (quiet on the fixed form), plus coverage of the
+suppression syntax, baseline fingerprinting, and the runner's exit
+codes — the last is what makes seeding a violation fail CI.
+"""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+
+from tools.lint import (                                    # noqa: E402
+    Finding,
+    ParsedModule,
+    diff_baseline,
+    lint_source,
+    load_baseline,
+    main,
+    parse_modules,
+    run_passes,
+    save_baseline,
+)
+
+CORE = "src/repro/core/fixture_mod.py"
+CLUSTER = "src/repro/cluster/fixture_mod.py"
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+def lint(source, path=CORE, rules=None):
+    return lint_source(source, path=path, root=str(ROOT), rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+class TestDeterminismPass:
+    def test_set_iteration_fires(self):
+        src = "def f(xs):\n    for x in set(xs):\n        print(x)\n"
+        assert "det-set-iter" in rules_of(lint(src))
+
+    def test_sorted_set_is_quiet(self):
+        src = "def f(xs):\n    for x in sorted(set(xs)):\n        print(x)\n"
+        assert "det-set-iter" not in rules_of(lint(src))
+
+    def test_set_literal_comprehension_fires(self):
+        src = "def f(xs):\n    return [x + 1 for x in {1, 2, 3}]\n"
+        assert "det-set-iter" in rules_of(lint(src))
+
+    def test_order_insensitive_consumers_are_quiet(self):
+        src = (
+            "def f(xs):\n"
+            "    s = {x for x in xs}\n"
+            "    return len(s), sum(s), max(s), any(s)\n"
+        )
+        assert "det-set-iter" not in rules_of(lint(src))
+
+    def test_out_of_scope_path_is_quiet(self):
+        src = "def f(xs):\n    for x in set(xs):\n        print(x)\n"
+        findings = lint(src, path="src/repro/launch/fixture_mod.py")
+        assert "det-set-iter" not in rules_of(findings)
+
+    def test_dict_view_iteration_fires(self):
+        src = "def f(d):\n    for k in d.keys():\n        print(k)\n"
+        assert "det-dict-iter" in rules_of(lint(src))
+
+    def test_sorted_dict_view_is_quiet(self):
+        src = "def f(d):\n    for k in sorted(d.items()):\n        print(k)\n"
+        assert "det-dict-iter" not in rules_of(lint(src))
+
+    def test_unseeded_rng_fires(self):
+        src = "import numpy as np\nrng = np.random.default_rng()\n"
+        assert "det-unseeded-rng" in rules_of(lint(src))
+
+    def test_seeded_rng_is_quiet(self):
+        src = "import numpy as np\nrng = np.random.default_rng(0)\n"
+        assert "det-unseeded-rng" not in rules_of(lint(src))
+
+    def test_legacy_global_numpy_rng_fires(self):
+        src = "import numpy as np\ndef f(x):\n    np.random.shuffle(x)\n"
+        assert "det-unseeded-rng" in rules_of(lint(src))
+
+    def test_rng_instance_methods_are_quiet(self):
+        src = "def f(rng):\n    return rng.random() + rng.shuffle([1])\n"
+        assert "det-unseeded-rng" not in rules_of(lint(src))
+
+    def test_wall_clock_fires_in_library_code(self):
+        src = "import time\nt = time.time()\n"
+        assert "det-wall-clock" in rules_of(lint(src, path=CLUSTER))
+
+    def test_perf_counter_is_quiet(self):
+        src = "import time\nt = time.perf_counter()\n"
+        assert "det-wall-clock" not in rules_of(lint(src, path=CLUSTER))
+
+    def test_wall_clock_allowed_in_benchmarks(self):
+        src = "import time\nt = time.time()\n"
+        findings = lint(src, path="benchmarks/fixture_bench.py")
+        assert "det-wall-clock" not in rules_of(findings)
+
+
+# ---------------------------------------------------------------------------
+# tracer discipline
+# ---------------------------------------------------------------------------
+
+
+class TestTracerDisciplinePass:
+    def test_unknown_span_fires(self):
+        src = 'def f(trc):\n    trc.instant("zzz.not_a_span")\n'
+        assert "trace-unknown-span" in rules_of(
+            lint(src, rules=["trace-unknown-span"])
+        )
+
+    def test_cataloged_span_is_quiet(self):
+        src = 'def f(trc):\n    trc.instant("flow.bfs")\n'
+        assert not lint(src, rules=["trace-unknown-span"])
+
+    def test_dynamic_prefix_matching_catalog_is_quiet(self):
+        src = 'def f(trc, ev):\n    trc.begin("event." + type(ev).__name__)\n'
+        assert not lint(src, rules=["trace-unknown-span"])
+
+    def test_dynamic_prefix_outside_catalog_fires(self):
+        src = 'def f(trc, ev):\n    trc.begin("zzz." + type(ev).__name__)\n'
+        assert rules_of(lint(src, rules=["trace-unknown-span"])) == [
+            "trace-unknown-span"
+        ]
+
+    def test_unguarded_args_fires(self):
+        src = 'def f(trc, n):\n    trc.instant("ocs.apply", count=n)\n'
+        assert "trace-unguarded-args" in rules_of(
+            lint(src, rules=["trace-unguarded-args"])
+        )
+
+    def test_enabled_guard_is_quiet(self):
+        src = (
+            "def f(trc, n):\n"
+            "    if trc.enabled:\n"
+            '        trc.instant("ocs.apply", count=n)\n'
+        )
+        assert not lint(src, rules=["trace-unguarded-args"])
+
+    def test_early_return_guard_is_quiet(self):
+        src = (
+            "def f(trc, n):\n"
+            "    if not trc.enabled:\n"
+            "        return n\n"
+            '    trc.instant("ocs.apply", count=n)\n'
+        )
+        assert not lint(src, rules=["trace-unguarded-args"])
+
+    def test_constant_only_call_needs_no_guard(self):
+        src = 'def f(trc):\n    with trc.span("flow.bfs", cat="flow"):\n        pass\n'
+        assert not lint(src, rules=["trace-unguarded-args"])
+
+    def test_dead_catalog_entry_fires(self, tmp_path):
+        schema_rel = "src/repro/obs/schema.py"
+        schema_src = (
+            "KNOWN_SPANS = {\n"
+            '    "flow": ("used.span", "dead.span"),\n'
+            "}\n"
+        )
+        user_src = 'def f(trc):\n    trc.instant("used.span")\n'
+        for rel, src in ((schema_rel, schema_src), (CORE, user_src)):
+            p = tmp_path / rel
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(src)
+        modules, errors = parse_modules(
+            str(tmp_path),
+            [str(tmp_path / schema_rel), str(tmp_path / CORE)],
+        )
+        assert not errors
+        findings = run_passes(modules, str(tmp_path))
+        dead = [f for f in findings if f.rule == "trace-dead-span"]
+        assert [f.snippet for f in dead] == ["dead.span"]
+        assert dead[0].path == schema_rel
+
+
+# ---------------------------------------------------------------------------
+# registry contracts
+# ---------------------------------------------------------------------------
+
+_REG_PRELUDE = (
+    "from repro.arch.registry import Architecture, CostVariant, register\n"
+    "\n"
+    "def flow_ok(scale, m, k_internal, inj):\n"
+    "    return 0.0\n"
+    "\n"
+    "def flow_bad(scale):\n"
+    "    return 0.0\n"
+    "\n"
+    "def cost_ok(prices=None):\n"
+    "    return None\n"
+    "\n"
+    "def cost_bad(tariff):\n"
+    "    return None\n"
+    "\n"
+)
+
+REG_PATH = "src/repro/arch/fixture_fab.py"
+
+
+class TestRegistryContractsPass:
+    def test_complete_registration_is_quiet(self):
+        src = _REG_PRELUDE + (
+            'register(Architecture(name="a", fig14_label="A",\n'
+            "    fig14_order=10, flow_fig14=flow_ok, cost=cost_ok,\n"
+            "    cost_variants=(\n"
+            "        CostVariant(order=130, build=lambda p: p),\n"
+            "    )))\n"
+        )
+        assert not lint(src, path=REG_PATH)
+
+    def test_duplicate_name_fires(self):
+        src = _REG_PRELUDE + (
+            'register(Architecture(name="a", flow_fig14=flow_ok))\n'
+            'register(Architecture(name="a", flow_fig14=flow_ok))\n'
+        )
+        assert "reg-contract" in rules_of(lint(src, path=REG_PATH))
+
+    def test_label_without_flow_fires(self):
+        src = _REG_PRELUDE + (
+            'register(Architecture(name="a", fig14_label="A",\n'
+            "    fig14_order=10))\n"
+        )
+        findings = lint(src, path=REG_PATH)
+        assert any(
+            "fig14_label without flow_fig14" in f.message for f in findings
+        )
+
+    def test_wrong_flow_arity_fires(self):
+        src = _REG_PRELUDE + (
+            'register(Architecture(name="a", flow_fig14=flow_bad))\n'
+        )
+        findings = lint(src, path=REG_PATH)
+        assert any("4 positional" in f.message for f in findings)
+
+    def test_cost_without_prices_param_fires(self):
+        src = _REG_PRELUDE + (
+            'register(Architecture(name="a", cost=cost_bad))\n'
+        )
+        findings = lint(src, path=REG_PATH)
+        assert any("`prices` parameter" in f.message for f in findings)
+
+    def test_duplicate_cost_order_fires(self):
+        src = _REG_PRELUDE + (
+            'register(Architecture(name="a", cost_variants=(\n'
+            "    CostVariant(order=130, build=lambda p: p),\n"
+            "    CostVariant(order=130, build=lambda p: p),\n"
+            ")))\n"
+        )
+        assert "reg-cost-order" in rules_of(lint(src, path=REG_PATH))
+
+    def test_interleaving_cost_order_fires(self):
+        src = _REG_PRELUDE + (
+            'register(Architecture(name="a", cost_variants=(\n'
+            "    CostVariant(order=25, build=lambda p: p),\n"
+            ")))\n"
+        )
+        findings = lint(src, path=REG_PATH)
+        assert any("extension slot" in f.message for f in findings)
+
+    def test_bad_build_arity_fires(self):
+        src = _REG_PRELUDE + (
+            'register(Architecture(name="a", cost_variants=(\n'
+            "    CostVariant(order=130, build=lambda: None),\n"
+            ")))\n"
+        )
+        findings = lint(src, path=REG_PATH)
+        assert any("one positional" in f.message for f in findings)
+
+    def test_real_fabrics_module_is_clean(self):
+        src_path = ROOT / "src/repro/arch/fabrics.py"
+        modules, errors = parse_modules(str(ROOT), [str(src_path)])
+        assert not errors
+        findings = [
+            f for f in run_passes(modules, str(ROOT))
+            if f.rule.startswith("reg-")
+        ]
+        assert not findings, [f.format() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# default-off flags
+# ---------------------------------------------------------------------------
+
+
+class TestDefaultOffFlagsPass:
+    def test_default_on_bool_field_fires(self):
+        src = (
+            "import dataclasses\n"
+            "@dataclasses.dataclass(frozen=True)\n"
+            "class FooConfig:\n"
+            "    enable_x: bool = True\n"
+        )
+        assert "flag-default-on" in rules_of(lint(src, path=CLUSTER))
+
+    def test_default_off_bool_field_is_quiet(self):
+        src = (
+            "import dataclasses\n"
+            "@dataclasses.dataclass(frozen=True)\n"
+            "class FooConfig:\n"
+            "    enable_x: bool = False\n"
+        )
+        assert not lint(src, path=CLUSTER)
+
+    def test_missing_default_fires(self):
+        src = (
+            "import dataclasses\n"
+            "@dataclasses.dataclass(frozen=True)\n"
+            "class FooConfig:\n"
+            "    enable_x: bool\n"
+        )
+        assert "flag-default-on" in rules_of(lint(src, path=CLUSTER))
+
+    def test_nonzero_rate_field_fires(self):
+        src = (
+            "import dataclasses\n"
+            "@dataclasses.dataclass(frozen=True)\n"
+            "class FooConfig:\n"
+            "    drop_rate: float = 0.1\n"
+        )
+        assert "flag-default-on" in rules_of(lint(src, path=CLUSTER))
+
+    def test_zero_rate_field_is_quiet(self):
+        src = (
+            "import dataclasses\n"
+            "@dataclasses.dataclass(frozen=True)\n"
+            "class FooConfig:\n"
+            "    drop_rate: float = 0.0\n"
+        )
+        assert not lint(src, path=CLUSTER)
+
+    def test_scheduler_init_default_true_fires(self):
+        src = (
+            "class FixtureScheduler:\n"
+            "    def __init__(self, preemption: bool = True):\n"
+            "        self.preemption = preemption\n"
+        )
+        assert "flag-default-on" in rules_of(lint(src, path=CLUSTER))
+
+    def test_scheduler_init_default_false_is_quiet(self):
+        src = (
+            "class FixtureScheduler:\n"
+            "    def __init__(self, preemption: bool = False):\n"
+            "        self.preemption = preemption\n"
+        )
+        assert not lint(src, path=CLUSTER)
+
+    def test_non_cluster_config_is_out_of_scope(self):
+        src = (
+            "import dataclasses\n"
+            "@dataclasses.dataclass(frozen=True)\n"
+            "class FooConfig:\n"
+            "    enable_x: bool = True\n"
+        )
+        assert not lint(src, path=CORE)
+
+
+# ---------------------------------------------------------------------------
+# frozen-dataclass mutation
+# ---------------------------------------------------------------------------
+
+
+class TestFrozenMutationPass:
+    def test_setattr_outside_post_init_fires(self):
+        src = (
+            "class C:\n"
+            "    def poke(self, v):\n"
+            '        object.__setattr__(self, "x", v)\n'
+        )
+        assert rules_of(lint(src)) == ["frozen-mutation"]
+
+    def test_post_init_is_quiet(self):
+        src = (
+            "class C:\n"
+            "    def __post_init__(self):\n"
+            '        object.__setattr__(self, "x", 1)\n'
+        )
+        assert not lint(src)
+
+    def test_nested_compound_statement_reports_once(self):
+        src = (
+            "class C:\n"
+            "    def poke(self, v):\n"
+            "        if v:\n"
+            '            object.__setattr__(self, "x", v)\n'
+        )
+        assert rules_of(lint(src)) == ["frozen-mutation"]
+
+
+# ---------------------------------------------------------------------------
+# suppression syntax
+# ---------------------------------------------------------------------------
+
+
+class TestSuppression:
+    VIOLATION = "import time\nt = time.time()"
+
+    def test_same_line_allow(self):
+        src = "import time\nt = time.time()  # lint: allow[det-wall-clock]\n"
+        assert not lint(src, path=CLUSTER)
+
+    def test_line_above_allow(self):
+        src = (
+            "import time\n"
+            "# lint: allow[det-wall-clock]\n"
+            "t = time.time()\n"
+        )
+        assert not lint(src, path=CLUSTER)
+
+    def test_allow_list_with_other_rule_does_not_suppress(self):
+        src = "import time\nt = time.time()  # lint: allow[det-set-iter]\n"
+        assert "det-wall-clock" in rules_of(lint(src, path=CLUSTER))
+
+    def test_file_level_allow(self):
+        src = (
+            "# lint: allow-file[det-wall-clock]\n"
+            "import time\n"
+            "t1 = time.time()\n"
+            "t2 = time.time()\n"
+        )
+        assert not lint(src, path=CLUSTER)
+
+    def test_two_lines_away_does_not_suppress(self):
+        src = (
+            "import time\n"
+            "# lint: allow[det-wall-clock]\n"
+            "x = 1\n"
+            "t = time.time()\n"
+        )
+        assert "det-wall-clock" in rules_of(lint(src, path=CLUSTER))
+
+
+# ---------------------------------------------------------------------------
+# baseline fingerprints and diff
+# ---------------------------------------------------------------------------
+
+
+class TestBaseline:
+    def _finding(self, line=5, snippet="t = time.time()"):
+        return Finding(
+            rule="det-wall-clock", path=CLUSTER, line=line, col=4,
+            message="wall clock", snippet=snippet,
+        )
+
+    def test_fingerprint_is_line_insensitive(self):
+        assert (
+            self._finding(line=5).fingerprint
+            == self._finding(line=50).fingerprint
+        )
+
+    def test_roundtrip_and_diff(self, tmp_path):
+        path = tmp_path / "baseline.json"
+        save_baseline(str(path), [self._finding(), self._finding(line=9)])
+        baseline = load_baseline(str(path))
+        # both occurrences covered: nothing new
+        new, stale = diff_baseline(
+            [self._finding(), self._finding(line=9)], baseline
+        )
+        assert not new and not stale
+        # a third occurrence of the same fingerprint is new
+        new, _ = diff_baseline(
+            [self._finding(), self._finding(9), self._finding(13)], baseline
+        )
+        assert len(new) == 1
+        # fixing both leaves a stale entry
+        new, stale = diff_baseline([], baseline)
+        assert not new and len(stale) == 1
+
+    def test_missing_baseline_file_is_empty(self, tmp_path):
+        assert load_baseline(str(tmp_path / "nope.json")) == {}
+
+
+# ---------------------------------------------------------------------------
+# runner exit codes (what CI hangs off)
+# ---------------------------------------------------------------------------
+
+
+class TestRunnerExitCodes:
+    def _seed_repo(self, tmp_path):
+        mod = tmp_path / CLUSTER
+        mod.parent.mkdir(parents=True)
+        mod.write_text("import time\nt = time.time()\n")
+        return mod
+
+    def test_seeded_violation_fails(self, tmp_path, capsys):
+        self._seed_repo(tmp_path)
+        rc = main(["--root", str(tmp_path), "--no-baseline"])
+        out = capsys.readouterr().out
+        assert rc == 1
+        assert "det-wall-clock" in out and "NEW" in out
+
+    def test_baseline_grandfathers_then_new_violation_fails(
+        self, tmp_path, capsys
+    ):
+        mod = self._seed_repo(tmp_path)
+        assert main(["--root", str(tmp_path), "--update-baseline"]) == 0
+        assert main(["--root", str(tmp_path)]) == 0
+        mod.write_text(mod.read_text() + "t2 = time.localtime()\n")
+        rc = main(["--root", str(tmp_path)])
+        out = capsys.readouterr().out
+        assert rc == 1
+        assert "1 new" in out
+
+    def test_fixing_violation_reports_stale_entry(self, tmp_path, capsys):
+        mod = self._seed_repo(tmp_path)
+        assert main(["--root", str(tmp_path), "--update-baseline"]) == 0
+        mod.write_text("import time\nt = time.perf_counter()\n")
+        rc = main(["--root", str(tmp_path)])
+        out = capsys.readouterr().out
+        assert rc == 0   # stale entries inform, they do not fail
+        assert "stale" in out
+
+    def test_json_reporter(self, tmp_path, capsys):
+        self._seed_repo(tmp_path)
+        import json as _json
+
+        rc = main(["--root", str(tmp_path), "--no-baseline",
+                   "--format", "json"])
+        payload = _json.loads(capsys.readouterr().out)
+        assert rc == 1
+        assert payload["new_count"] == 1
+        assert payload["findings"][0]["rule"] == "det-wall-clock"
+
+    def test_repo_is_lint_clean_against_baseline(self):
+        rc = main(["--root", str(ROOT)])
+        assert rc == 0

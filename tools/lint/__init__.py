@@ -1,0 +1,53 @@
+"""repro-lint: a stdlib-``ast`` static analyzer for this repo's invariants.
+
+Five composable passes (see ``tools/lint/README.md`` for the rule
+reference and the suppression/baseline workflow):
+
+* **determinism** — unordered set/dict-view iteration in the
+  deterministic core, unseeded/global RNG, wall-clock reads;
+* **tracer-discipline** — span names vs ``obs.schema.KNOWN_SPANS`` and
+  the NULL_TRACER zero-allocation guard rule;
+* **registry-contracts** — ``register(Architecture(...))`` completeness
+  (unique names/labels/orders, capability signatures, Table 6 slots);
+* **default-off-flags** — boolean/rate config fields default inert;
+* **frozen-mutation** — ``object.__setattr__`` only in ``__post_init__``.
+
+Run ``PYTHONPATH=src python -m tools.lint`` from the repo root; exit
+status 1 means findings not covered by ``tools/lint/baseline.json``.
+"""
+
+from .core import (
+    Finding,
+    ParsedModule,
+    diff_baseline,
+    load_baseline,
+    save_baseline,
+)
+from .passes import ALL_PASSES
+from .runner import (
+    DEFAULT_BASELINE,
+    DEFAULT_ROOTS,
+    LintContext,
+    discover_files,
+    lint_source,
+    main,
+    parse_modules,
+    run_passes,
+)
+
+__all__ = [
+    "ALL_PASSES",
+    "DEFAULT_BASELINE",
+    "DEFAULT_ROOTS",
+    "Finding",
+    "LintContext",
+    "ParsedModule",
+    "diff_baseline",
+    "discover_files",
+    "lint_source",
+    "load_baseline",
+    "main",
+    "parse_modules",
+    "run_passes",
+    "save_baseline",
+]

@@ -1,0 +1,247 @@
+"""repro-lint core: findings, parsed modules, suppressions, baselines.
+
+The analyzer is stdlib-only (``ast`` + ``json``): it must run in CI
+before any heavy dependency is importable, and it must never execute the
+code it checks — every invariant is read off the syntax tree.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple
+
+# ``# lint: allow[rule-a,rule-b]`` on the finding's line (or the line
+# above it) suppresses those rules there; ``allow-file`` anywhere in the
+# file suppresses them for the whole file.
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\[([A-Za-z0-9_\-, ]+)\]")
+_ALLOW_FILE_RE = re.compile(r"#\s*lint:\s*allow-file\[([A-Za-z0-9_\-, ]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location.
+
+    ``snippet`` (the stripped source line) — not the line number — keys
+    the baseline fingerprint, so unrelated edits above a grandfathered
+    finding do not invalidate the baseline.
+    """
+
+    rule: str
+    path: str          # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    snippet: str = ""
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}::{self.path}::{self.snippet}"
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+
+class ParsedModule:
+    """One source file: AST + per-line suppression table."""
+
+    def __init__(self, path: str, source: str, abspath: Optional[str] = None):
+        self.path = path.replace(os.sep, "/")
+        self.abspath = abspath or path
+        self.source = source
+        self.lines: List[str] = source.splitlines()
+        self.tree: ast.Module = ast.parse(source, filename=self.path)
+        self.allow: Dict[int, FrozenSet[str]] = {}
+        self.file_allow: FrozenSet[str] = frozenset()
+        self._parse_suppressions()
+
+    def _parse_suppressions(self) -> None:
+        file_rules: set = set()
+        for i, text in enumerate(self.lines, start=1):
+            if "lint:" not in text:
+                continue
+            m = _ALLOW_FILE_RE.search(text)
+            if m:
+                file_rules.update(_split_rules(m.group(1)))
+            m = _ALLOW_RE.search(text)
+            if m:
+                self.allow[i] = frozenset(_split_rules(m.group(1)))
+        self.file_allow = frozenset(file_rules)
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def is_suppressed(self, finding: Finding) -> bool:
+        if finding.rule in self.file_allow or "*" in self.file_allow:
+            return True
+        for ln in (finding.line, finding.line - 1):
+            rules = self.allow.get(ln)
+            if rules and (finding.rule in rules or "*" in rules):
+                return True
+        return False
+
+    def finding(
+        self, rule: str, node: ast.AST, message: str
+    ) -> Finding:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(
+            rule=rule, path=self.path, line=line, col=col,
+            message=message, snippet=self.line_text(line),
+        )
+
+
+def _split_rules(spec: str) -> List[str]:
+    return [r.strip() for r in spec.split(",") if r.strip()]
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by the passes
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``np.random.default_rng`` -> "np.random.default_rng" (None when the
+    expression is not a plain attribute chain)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def import_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Local name -> fully dotted import target, for resolving attribute
+    chains (``import numpy as np`` makes "np" -> "numpy"; ``from time
+    import time`` makes "time" -> "time.time")."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom) and node.level == 0:
+            mod = node.module or ""
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{mod}.{a.name}" if mod else a.name
+    return aliases
+
+
+def resolve_dotted(name: str, aliases: Dict[str, str]) -> str:
+    """Expand the first segment of a dotted chain through the import
+    alias table: ``np.random.rand`` -> ``numpy.random.rand``."""
+    head, _, rest = name.partition(".")
+    base = aliases.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+def call_arity(fn: ast.AST) -> Optional[Tuple[int, int, bool]]:
+    """(min_positional, max_positional, has_vararg) of a def/lambda node."""
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        a = fn.args
+        pos = list(getattr(a, "posonlyargs", [])) + list(a.args)
+        n_default = len(a.defaults)
+        return (len(pos) - n_default, len(pos), a.vararg is not None)
+    return None
+
+
+def accepts_positional(fn: ast.AST, n: int) -> Optional[bool]:
+    """Can ``fn`` be called with exactly ``n`` positional arguments?
+    None when ``fn`` is not a def/lambda node."""
+    arity = call_arity(fn)
+    if arity is None:
+        return None
+    lo, hi, vararg = arity
+    return lo <= n and (vararg or n <= hi)
+
+
+def param_names(fn: ast.AST) -> List[str]:
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        a = fn.args
+        names = [p.arg for p in getattr(a, "posonlyargs", [])]
+        names += [p.arg for p in a.args]
+        names += [p.arg for p in a.kwonlyargs]
+        return names
+    return []
+
+
+def is_frozen_dataclass(cls: ast.ClassDef) -> bool:
+    """Does the class carry ``@dataclass(frozen=True)`` (any spelling)?"""
+    for deco in cls.decorator_list:
+        target = deco.func if isinstance(deco, ast.Call) else deco
+        name = dotted_name(target) or ""
+        if name.split(".")[-1] != "dataclass":
+            continue
+        if not isinstance(deco, ast.Call):
+            return False  # bare @dataclass: not frozen
+        for kw in deco.keywords:
+            if kw.arg == "frozen":
+                return (
+                    isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True
+                )
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+
+def load_baseline(path: str) -> Dict[str, int]:
+    """fingerprint -> grandfathered occurrence count."""
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        data = json.load(f)
+    entries = data.get("entries", {})
+    return {str(k): int(v) for k, v in entries.items()}
+
+
+def save_baseline(path: str, findings: Iterable[Finding]) -> None:
+    counts: Dict[str, int] = {}
+    for f in findings:
+        counts[f.fingerprint] = counts.get(f.fingerprint, 0) + 1
+    payload = {
+        "version": 1,
+        "comment": (
+            "Grandfathered repro-lint findings. Regenerate with "
+            "`python -m tools.lint --update-baseline`; new code must be "
+            "clean or carry an explicit `# lint: allow[rule]`."
+        ),
+        "entries": {k: counts[k] for k in sorted(counts)},
+    }
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+
+
+def diff_baseline(
+    findings: List[Finding], baseline: Dict[str, int]
+) -> Tuple[List[Finding], List[str]]:
+    """(new findings not covered by the baseline, stale baseline
+    fingerprints with no surviving finding)."""
+    budget = dict(baseline)
+    new: List[Finding] = []
+    for f in findings:
+        fp = f.fingerprint
+        if budget.get(fp, 0) > 0:
+            budget[fp] -= 1
+        else:
+            new.append(f)
+    stale = sorted(fp for fp, n in budget.items() if n > 0)
+    return new, stale

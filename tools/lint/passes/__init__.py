@@ -1,0 +1,30 @@
+"""The composable repro-lint passes.
+
+Each pass is an object with a ``name``, the ``rules`` it can emit, a
+``run(module, ctx)`` generator yielding :class:`tools.lint.core.Finding`
+per file, and an optional ``finish(ctx)`` for whole-project checks that
+need state accumulated across files (e.g. the dead-catalog-entry check).
+"""
+
+from .determinism import DeterminismPass
+from .flags import DefaultOffFlagsPass
+from .frozen_mutation import FrozenMutationPass
+from .registry_contracts import RegistryContractsPass
+from .tracer_discipline import TracerDisciplinePass
+
+ALL_PASSES = (
+    DeterminismPass,
+    TracerDisciplinePass,
+    RegistryContractsPass,
+    DefaultOffFlagsPass,
+    FrozenMutationPass,
+)
+
+__all__ = [
+    "ALL_PASSES",
+    "DeterminismPass",
+    "TracerDisciplinePass",
+    "RegistryContractsPass",
+    "DefaultOffFlagsPass",
+    "FrozenMutationPass",
+]

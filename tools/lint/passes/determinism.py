@@ -1,0 +1,230 @@
+"""Determinism pass: seeded-replay hazards the tests cannot see.
+
+The repo's headline guarantees (byte-identical flags-off scheduling,
+replay-deterministic chaos invariants, bit-equal compiled-flow loads)
+all assume no code path consults unordered iteration, global RNG state,
+or the wall clock.  Three rules:
+
+``det-set-iter``
+    Order-sensitive iteration over a *syntactic* set — ``set(...)`` /
+    ``frozenset(...)`` calls, ``{a, b}`` literals, set comprehensions,
+    or set-algebra binops on them — in the deterministic core
+    (``src/repro/{cluster,core,arch}``) without a ``sorted(...)``-style
+    order-fixing wrapper.  Python sets hash-order tuples differently
+    per process (PYTHONHASHSEED), so a bare loop is a replay hazard.
+
+``det-dict-iter``
+    Iteration over explicit dict views (``.keys()`` / ``.values()`` /
+    ``.items()``) in the same scope.  Insertion-ordered since 3.7, so
+    these are deterministic *if* every insertion site is — the rule
+    exists to force that argument to be made once per site: existing
+    audited loops are grandfathered in the baseline, new ones need a
+    ``sorted(...)`` or an explicit ``# lint: allow[det-dict-iter]``.
+
+``det-unseeded-rng``
+    ``np.random.default_rng()`` / ``np.random.RandomState()`` /
+    ``random.Random()`` without a seed argument, and any call into the
+    legacy global-state RNG (``np.random.rand`` and friends, module-
+    level ``random.random`` etc.).  All randomness must flow through an
+    explicitly seeded generator object.
+
+``det-wall-clock``
+    Wall-clock reads (``time.time``, ``datetime.now``, ...) outside the
+    benchmark/example allowlist.  Durations must use the monotonic
+    ``time.perf_counter`` family; sim code must never read real time.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator, List
+
+from ..core import Finding, ParsedModule, dotted_name, import_aliases, resolve_dotted
+
+# order-insensitive (or order-fixing) consumers a syntactic set may feed
+_ORDER_SAFE_WRAPPERS = {
+    "sorted", "min", "max", "sum", "len", "any", "all",
+    "set", "frozenset",
+}
+
+# order-sensitive direct consumers worth flagging outside loops
+_ORDER_SENSITIVE_CONSUMERS = {"list", "tuple", "enumerate", "iter", "next"}
+
+_LEGACY_NP_RANDOM = {
+    "seed", "random", "rand", "randn", "randint", "random_sample",
+    "ranf", "sample", "choice", "shuffle", "permutation", "uniform",
+    "normal", "exponential", "poisson", "binomial", "beta", "gamma",
+    "standard_normal", "random_integers", "bytes", "get_state",
+    "set_state",
+}
+
+_STDLIB_RANDOM_FNS = {
+    "seed", "random", "randrange", "randint", "choice", "choices",
+    "shuffle", "sample", "uniform", "expovariate", "gauss",
+    "normalvariate", "lognormvariate", "weibullvariate", "betavariate",
+    "gammavariate", "vonmisesvariate", "paretovariate", "triangular",
+    "getrandbits", "randbytes",
+}
+
+_WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.localtime", "time.ctime",
+    "time.gmtime", "datetime.datetime.now", "datetime.datetime.today",
+    "datetime.datetime.utcnow", "datetime.date.today",
+}
+
+
+def _is_setlike(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        return name in ("set", "frozenset")
+    if isinstance(node, ast.BinOp) and isinstance(
+        node.op, (ast.BitOr, ast.BitAnd, ast.Sub, ast.BitXor)
+    ):
+        return _is_setlike(node.left) or _is_setlike(node.right)
+    return False
+
+
+def _is_dict_view(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr in ("keys", "values", "items")
+        and not node.args
+        and not node.keywords
+    )
+
+
+class DeterminismPass:
+    name = "determinism"
+    rules = (
+        "det-set-iter", "det-dict-iter", "det-unseeded-rng",
+        "det-wall-clock",
+    )
+
+    # set/dict-view iteration is only policed in the deterministic core
+    SET_ITER_SCOPE = ("src/repro/cluster/", "src/repro/core/", "src/repro/arch/")
+    # wall-clock reads are fine in benchmark drivers and examples
+    WALL_CLOCK_ALLOW = ("benchmarks/", "examples/")
+
+    def __init__(self) -> None:
+        pass
+
+    def run(self, module: ParsedModule, ctx) -> Iterator[Finding]:
+        aliases = import_aliases(module.tree)
+        in_core = module.path.startswith(self.SET_ITER_SCOPE)
+        clock_ok = module.path.startswith(self.WALL_CLOCK_ALLOW)
+        for node in ast.walk(module.tree):
+            if in_core:
+                yield from self._check_iteration(module, node)
+            if isinstance(node, ast.Call):
+                yield from self._check_rng(module, node, aliases)
+                if not clock_ok:
+                    yield from self._check_clock(module, node, aliases)
+
+    # -- unordered iteration ------------------------------------------------
+
+    def _check_iteration(
+        self, module: ParsedModule, node: ast.AST
+    ) -> Iterator[Finding]:
+        iters: List[ast.AST] = []
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            iters.append(node.iter)
+        elif isinstance(node, (ast.ListComp, ast.GeneratorExp, ast.DictComp)):
+            # a SetComp over a set stays order-free; list/gen/dict
+            # comprehensions bake the hash order into their output
+            iters.extend(gen.iter for gen in node.generators)
+        elif isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            consumer = (name or "").split(".")[-1]
+            if (
+                name in _ORDER_SENSITIVE_CONSUMERS
+                or (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "join")
+            ) and node.args:
+                iters.append(node.args[0])
+            elif name in _ORDER_SAFE_WRAPPERS or consumer in (
+                "union", "intersection", "difference",
+            ):
+                return
+        for it in iters:
+            if _is_setlike(it):
+                yield module.finding(
+                    "det-set-iter", it,
+                    "iteration over a bare set/frozenset is hash-order "
+                    "dependent; wrap it in sorted(...) or restructure",
+                )
+            elif _is_dict_view(it):
+                yield module.finding(
+                    "det-dict-iter", it,
+                    "iteration over a dict view: audit that every "
+                    "insertion site is deterministic, then wrap in "
+                    "sorted(...) or annotate `# lint: allow[det-dict-iter]`",
+                )
+
+    # -- RNG discipline -----------------------------------------------------
+
+    def _check_rng(
+        self, module: ParsedModule, node: ast.Call, aliases
+    ) -> Iterator[Finding]:
+        raw = dotted_name(node.func)
+        if raw is None:
+            return
+        name = resolve_dotted(raw, aliases)
+        unseeded = not node.args and not node.keywords
+        if name.endswith("random.default_rng") and unseeded:
+            yield module.finding(
+                "det-unseeded-rng", node,
+                "np.random.default_rng() without a seed draws OS entropy; "
+                "pass an explicit seed",
+            )
+        elif name.endswith("random.RandomState") and unseeded:
+            yield module.finding(
+                "det-unseeded-rng", node,
+                "np.random.RandomState() without a seed draws OS entropy; "
+                "pass an explicit seed",
+            )
+        elif name == "random.Random" and unseeded:
+            yield module.finding(
+                "det-unseeded-rng", node,
+                "random.Random() without a seed draws OS entropy; pass an "
+                "explicit seed",
+            )
+        elif name.startswith("numpy.random.") and (
+            name.rsplit(".", 1)[-1] in _LEGACY_NP_RANDOM
+        ):
+            yield module.finding(
+                "det-unseeded-rng", node,
+                f"legacy global-state RNG call {name}; use a seeded "
+                "np.random.Generator / RandomState instance",
+            )
+        elif name.startswith("random.") and (
+            name.rsplit(".", 1)[-1] in _STDLIB_RANDOM_FNS
+            and raw.startswith("random.")
+        ):
+            yield module.finding(
+                "det-unseeded-rng", node,
+                f"module-level {name} uses the global RNG; use a seeded "
+                "random.Random instance",
+            )
+
+    # -- wall clock ---------------------------------------------------------
+
+    def _check_clock(
+        self, module: ParsedModule, node: ast.Call, aliases
+    ) -> Iterator[Finding]:
+        raw = dotted_name(node.func)
+        if raw is None:
+            return
+        name = resolve_dotted(raw, aliases)
+        if name in _WALL_CLOCK:
+            yield module.finding(
+                "det-wall-clock", node,
+                f"wall-clock read {name} outside the benchmark/example "
+                "allowlist; use time.perf_counter() for durations, or "
+                "thread a timestamp in as an argument",
+            )
+
+    def finish(self, ctx) -> Iterable[Finding]:
+        return ()

@@ -1,0 +1,117 @@
+"""Default-off flags pass: policy features must be inert by default.
+
+The repo's standing rule (every PR since the policy engine landed):
+flags-off scheduling is byte-identical to the seed — every opt-in
+behavior defaults off.  Statically:
+
+``flag-default-on``
+    * On frozen ``*Config`` dataclasses under ``src/repro/cluster/``
+      (``TxnConfig``-style bundles): every ``bool`` field must default
+      to ``False`` and every ``*_rate`` / ``*_prob`` field to ``0`` — a
+      missing default counts as a violation (a required hot field is a
+      default-on flag in disguise).
+    * On ``__init__`` of classes named ``*Scheduler``: every boolean
+      keyword default must be ``False``.  Deliberately-on switches
+      (e.g. a repair rung that is provably inert without fault events)
+      carry an explicit ``# lint: allow[flag-default-on]`` with the
+      inertness argument next to the default they defend.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator, Optional
+
+from ..core import Finding, ParsedModule, is_frozen_dataclass
+
+_RATE_SUFFIXES = ("_rate", "_prob", "_probability")
+
+
+def _is_bool_annotation(node: Optional[ast.AST]) -> bool:
+    return isinstance(node, ast.Name) and node.id == "bool"
+
+
+def _const(node: Optional[ast.AST]):
+    if isinstance(node, ast.Constant):
+        return node.value
+    return None
+
+
+class DefaultOffFlagsPass:
+    name = "default-off-flags"
+    rules = ("flag-default-on",)
+
+    SCOPE = ("src/repro/cluster/",)
+
+    def run(self, module: ParsedModule, ctx) -> Iterator[Finding]:
+        if not module.path.startswith(self.SCOPE):
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            if node.name.endswith("Config") and is_frozen_dataclass(node):
+                yield from self._check_config_fields(module, node)
+            if node.name.endswith("Scheduler"):
+                yield from self._check_init_defaults(module, node)
+
+    def _check_config_fields(
+        self, module: ParsedModule, cls: ast.ClassDef
+    ) -> Iterator[Finding]:
+        for stmt in cls.body:
+            if not isinstance(stmt, ast.AnnAssign) or not isinstance(
+                stmt.target, ast.Name
+            ):
+                continue
+            field = stmt.target.id
+            if _is_bool_annotation(stmt.annotation):
+                if stmt.value is None or _const(stmt.value) is not False:
+                    yield module.finding(
+                        "flag-default-on", stmt,
+                        f"{cls.name}.{field}: boolean config field must "
+                        "default to False (flags-off runs must be "
+                        "byte-identical to the seed)",
+                    )
+            elif field.endswith(_RATE_SUFFIXES):
+                if stmt.value is None or _const(stmt.value) not in (0, 0.0):
+                    yield module.finding(
+                        "flag-default-on", stmt,
+                        f"{cls.name}.{field}: rate field must default to "
+                        "0 so the default config injects nothing",
+                    )
+
+    def _check_init_defaults(
+        self, module: ParsedModule, cls: ast.ClassDef
+    ) -> Iterator[Finding]:
+        init = next(
+            (
+                s for s in cls.body
+                if isinstance(s, ast.FunctionDef) and s.name == "__init__"
+            ),
+            None,
+        )
+        if init is None:
+            return
+        args = init.args
+        pos = list(getattr(args, "posonlyargs", [])) + list(args.args)
+        defaults: list = [None] * (len(pos) - len(args.defaults)) + list(
+            args.defaults
+        )
+        pairs = list(zip(pos, defaults)) + list(
+            zip(args.kwonlyargs, args.kw_defaults)
+        )
+        for param, default in pairs:
+            if default is None:
+                continue
+            is_bool = _is_bool_annotation(param.annotation) or isinstance(
+                _const(default), bool
+            )
+            if is_bool and _const(default) is True:
+                yield module.finding(
+                    "flag-default-on", default,
+                    f"{cls.name}.__init__ parameter {param.arg!r} defaults "
+                    "to True; behavior flags default off (or justify with "
+                    "`# lint: allow[flag-default-on]`)",
+                )
+
+    def finish(self, ctx) -> Iterable[Finding]:
+        return ()

@@ -1,0 +1,71 @@
+"""Frozen-dataclass mutation pass.
+
+``frozen-mutation``
+    ``object.__setattr__(...)`` is the sanctioned escape hatch for
+    initializing derived fields of a frozen dataclass — but only inside
+    ``__post_init__``.  Anywhere else it silently defeats the
+    immutability the rest of the codebase relies on (frozen configs are
+    shared, hashed, and memo-keyed), so any other use is a finding.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator, List
+
+from ..core import Finding, ParsedModule, dotted_name
+
+
+class FrozenMutationPass:
+    name = "frozen-mutation"
+    rules = ("frozen-mutation",)
+
+    def run(self, module: ParsedModule, ctx) -> Iterator[Finding]:
+        yield from self._scan(module, module.tree.body, in_post_init=False)
+
+    def _scan(
+        self, module: ParsedModule, stmts: List[ast.stmt], in_post_init: bool
+    ) -> Iterator[Finding]:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._scan(
+                    module, stmt.body, stmt.name == "__post_init__"
+                )
+                continue
+            if isinstance(stmt, ast.ClassDef):
+                yield from self._scan(module, stmt.body, False)
+                continue
+            bodies = list(self._compound_bodies(stmt))
+            if bodies:
+                # compound statement: recurse so the __post_init__
+                # context stays accurate for nested defs
+                for child_body in bodies:
+                    yield from self._scan(module, child_body, in_post_init)
+                continue
+            if in_post_init:
+                continue
+            for node in ast.walk(stmt):
+                if (
+                    isinstance(node, ast.Call)
+                    and dotted_name(node.func) == "object.__setattr__"
+                ):
+                    yield module.finding(
+                        "frozen-mutation", node,
+                        "object.__setattr__ outside __post_init__ mutates "
+                        "a frozen dataclass; construct a new instance "
+                        "(dataclasses.replace) instead",
+                    )
+
+    @staticmethod
+    def _compound_bodies(stmt: ast.stmt) -> Iterator[List[ast.stmt]]:
+        for attr in ("body", "orelse", "finalbody"):
+            body = getattr(stmt, attr, None)
+            if isinstance(body, list) and body and isinstance(
+                body[0], ast.stmt
+            ):
+                yield body
+        for handler in getattr(stmt, "handlers", []) or []:
+            yield handler.body
+
+    def finish(self, ctx) -> Iterable[Finding]:
+        return ()

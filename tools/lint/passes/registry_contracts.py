@@ -1,0 +1,273 @@
+"""Registry contracts pass: static completeness of Architecture records.
+
+``tests/test_arch_registry.py`` exercises every *registered* capability
+at runtime; this pass checks, at diff time and across all branches, the
+contracts a registration must satisfy before any test runs:
+
+``reg-contract``
+    For every ``register(Architecture(...))`` call in a module:
+
+    * ``name`` / ``fig14_label`` / ``fig14_order`` (among labeled
+      fabrics) are unique;
+    * ``fig14_label`` requires ``flow_fig14`` (the static form of the
+      registry's runtime ValueError);
+    * capability callables resolve to defs/lambdas with the expected
+      arities — ``flow_fig14(scale, m, k_internal, inj)`` (4),
+      ``compiled_fig14`` (3), ``job_network(cfg, mapping, alloc)`` (3),
+      ``CostVariant.build`` (1: prices), and ``cost`` exposing a
+      ``prices`` parameter.  Names are resolved through same-module
+      defs/assignments and one hop of repo-relative imports; anything
+      unresolvable is skipped, never guessed.
+
+``reg-cost-order``
+    ``CostVariant`` order slots are unique across the module, and any
+    slot outside the seed Table 6 layout (10..120 in tens) must sit in
+    the extension range (>= 130) so new fabrics append rows instead of
+    silently reordering the paper's table.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+
+from ..core import Finding, ParsedModule, accepts_positional, dotted_name, param_names
+
+_SEED_COST_ORDERS = frozenset(range(10, 121, 10))
+_EXTENSION_MIN = 130
+
+# (keyword, positional arity) checks on Architecture capabilities
+_ARITY_CHECKS = {
+    "flow_fig14": 4,
+    "compiled_fig14": 3,
+    "job_network": 3,
+}
+
+
+def _module_defs(tree: ast.Module) -> Dict[str, ast.AST]:
+    """name -> def/lambda for module-level functions and assignments."""
+    defs: Dict[str, ast.AST] = {}
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = node
+        elif isinstance(node, ast.Assign) and isinstance(
+            node.value, ast.Lambda
+        ):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    defs[tgt.id] = node.value
+    return defs
+
+
+def _relative_import_sources(
+    module: ParsedModule,
+) -> Dict[str, Tuple[str, str]]:
+    """imported name -> (source file abspath, original name) for
+    repo-relative ``from ..pkg import name`` statements."""
+    out: Dict[str, Tuple[str, str]] = {}
+    pkg_dir = os.path.dirname(module.abspath)
+    for node in module.tree.body:
+        if not isinstance(node, ast.ImportFrom) or node.level == 0:
+            continue
+        base = pkg_dir
+        for _ in range(node.level - 1):
+            base = os.path.dirname(base)
+        mod_path = os.path.join(base, *(node.module or "").split("."))
+        for cand in (mod_path + ".py", os.path.join(mod_path, "__init__.py")):
+            if os.path.exists(cand):
+                for a in node.names:
+                    out[a.asname or a.name] = (cand, a.name)
+                break
+    return out
+
+
+class RegistryContractsPass:
+    name = "registry-contracts"
+    rules = ("reg-contract", "reg-cost-order")
+
+    def __init__(self) -> None:
+        self._foreign_cache: Dict[str, Dict[str, ast.AST]] = {}
+
+    def run(self, module: ParsedModule, ctx) -> Iterator[Finding]:
+        registrations = [
+            call for call in ast.walk(module.tree)
+            if isinstance(call, ast.Call) and self._architecture_arg(call)
+        ]
+        if not registrations:
+            return
+        defs = _module_defs(module.tree)
+        imports = _relative_import_sources(module)
+        names: Dict[str, ast.AST] = {}
+        labels: Dict[str, ast.AST] = {}
+        orders: Dict[int, ast.AST] = {}
+        cost_orders: Dict[int, ast.AST] = {}
+        for call in registrations:
+            arch = self._architecture_arg(call)
+            assert arch is not None
+            kw = {k.arg: k.value for k in arch.keywords if k.arg}
+            yield from self._check_identity(
+                module, arch, kw, names, labels, orders
+            )
+            yield from self._check_signatures(module, arch, kw, defs, imports)
+            yield from self._check_cost_variants(
+                module, kw.get("cost_variants"), cost_orders, defs, imports
+            )
+
+    # -- helpers ------------------------------------------------------------
+
+    def _architecture_arg(self, call: ast.Call) -> Optional[ast.Call]:
+        fn = dotted_name(call.func) or ""
+        if fn.split(".")[-1] != "register" or not call.args:
+            return None
+        arg = call.args[0]
+        if (
+            isinstance(arg, ast.Call)
+            and (dotted_name(arg.func) or "").split(".")[-1] == "Architecture"
+        ):
+            return arg
+        return None
+
+    def _check_identity(
+        self, module, arch, kw, names, labels, orders
+    ) -> Iterator[Finding]:
+        name_node = kw.get("name")
+        name = (
+            name_node.value
+            if isinstance(name_node, ast.Constant) else None
+        )
+        if isinstance(name, str):
+            if name in names:
+                yield module.finding(
+                    "reg-contract", arch,
+                    f"duplicate architecture name {name!r}",
+                )
+            names[name] = arch
+        label_node = kw.get("fig14_label")
+        label = (
+            label_node.value
+            if isinstance(label_node, ast.Constant) else None
+        )
+        if isinstance(label, str):
+            if label in labels:
+                yield module.finding(
+                    "reg-contract", label_node,
+                    f"duplicate fig14_label {label!r}",
+                )
+            labels[label] = arch
+            if "flow_fig14" not in kw:
+                yield module.finding(
+                    "reg-contract", arch,
+                    f"{name!r} declares fig14_label without flow_fig14",
+                )
+            order_node = kw.get("fig14_order")
+            if isinstance(order_node, ast.Constant) and isinstance(
+                order_node.value, int
+            ):
+                if order_node.value in orders:
+                    yield module.finding(
+                        "reg-contract", order_node,
+                        f"duplicate fig14_order {order_node.value} "
+                        f"({name!r}): curves would collide in the sweep",
+                    )
+                orders[order_node.value] = arch
+
+    def _resolve(self, expr: ast.AST, defs, imports) -> Optional[ast.AST]:
+        """Resolve an expression to a def/lambda node, or None."""
+        if isinstance(expr, ast.Lambda):
+            return expr
+        if isinstance(expr, ast.Name):
+            if expr.id in defs:
+                return defs[expr.id]
+            if expr.id in imports:
+                path, orig = imports[expr.id]
+                return self._foreign_defs(path).get(orig)
+        return None  # attribute chains / calls: out of static reach
+
+    def _foreign_defs(self, path: str) -> Dict[str, ast.AST]:
+        if path not in self._foreign_cache:
+            try:
+                with open(path) as f:
+                    tree = ast.parse(f.read(), filename=path)
+                self._foreign_cache[path] = _module_defs(tree)
+            except (OSError, SyntaxError):
+                self._foreign_cache[path] = {}
+        return self._foreign_cache[path]
+
+    def _check_signatures(
+        self, module, arch, kw, defs, imports
+    ) -> Iterator[Finding]:
+        for field, arity in _ARITY_CHECKS.items():
+            expr = kw.get(field)
+            if expr is None:
+                continue
+            fn = self._resolve(expr, defs, imports)
+            if fn is None:
+                continue
+            ok = accepts_positional(fn, arity)
+            if ok is False:
+                yield module.finding(
+                    "reg-contract", expr,
+                    f"{field} must accept {arity} positional arguments "
+                    f"(the normalized registry entry point); the bound "
+                    "callable does not",
+                )
+        cost = kw.get("cost")
+        if cost is not None:
+            fn = self._resolve(cost, defs, imports)
+            if fn is not None and "prices" not in param_names(fn):
+                yield module.finding(
+                    "reg-contract", cost,
+                    "cost callable must expose a `prices` parameter "
+                    "(cost(prices=Prices(), **params) -> CostRow)",
+                )
+
+    def _check_cost_variants(
+        self, module, variants_node, cost_orders, defs, imports
+    ) -> Iterator[Finding]:
+        if not isinstance(variants_node, (ast.Tuple, ast.List)):
+            return
+        for var in variants_node.elts:
+            if not (
+                isinstance(var, ast.Call)
+                and (dotted_name(var.func) or "").split(".")[-1]
+                == "CostVariant"
+            ):
+                continue
+            vkw = {k.arg: k.value for k in var.keywords if k.arg}
+            order_node = vkw.get("order")
+            if len(var.args) >= 1 and order_node is None:
+                order_node = var.args[0]
+            if isinstance(order_node, ast.Constant) and isinstance(
+                order_node.value, int
+            ):
+                order = order_node.value
+                if order in cost_orders:
+                    yield module.finding(
+                        "reg-cost-order", order_node,
+                        f"duplicate CostVariant order slot {order}: two "
+                        "fabrics would claim the same Table 6 row",
+                    )
+                elif order not in _SEED_COST_ORDERS and order < _EXTENSION_MIN:
+                    yield module.finding(
+                        "reg-cost-order", order_node,
+                        f"CostVariant order {order} is neither a seed "
+                        f"Table 6 slot (10..120) nor an extension slot "
+                        f"(>= {_EXTENSION_MIN}); extensions append, they "
+                        "do not interleave the paper's rows",
+                    )
+                cost_orders[order] = var
+            build = vkw.get("build")
+            if build is None and len(var.args) >= 2:
+                build = var.args[1]
+            if build is not None:
+                fn = self._resolve(build, defs, imports)
+                if fn is not None and accepts_positional(fn, 1) is False:
+                    yield module.finding(
+                        "reg-contract", build,
+                        "CostVariant.build must accept one positional "
+                        "argument (prices)",
+                    )
+
+    def finish(self, ctx) -> Iterable[Finding]:
+        return ()

@@ -1,0 +1,273 @@
+"""Tracer discipline pass: the span catalog and the NULL_TRACER rule.
+
+``trace-unknown-span``
+    Every span/instant name an instrumentation point passes to a tracer
+    call must be listed in ``repro.obs.schema.KNOWN_SPANS``.  Names are
+    extracted statically: string literals match exactly; dynamic names
+    with a constant prefix (``"event." + type(ev).__name__``,
+    ``f"event.{name}"``) must have at least one catalog entry under
+    that prefix.  The catalog itself is read off ``schema.py``'s AST —
+    the linter never imports the code it checks.
+
+``trace-dead-span``
+    The reverse containment (project-level, emitted from ``finish``):
+    every cataloged span name must be referenced by some instrumentation
+    point, literally or via a dynamic prefix — a dead catalog entry is
+    documentation drift.
+
+``trace-unguarded-args``
+    The zero-allocation NULL_TRACER contract: a tracer call that builds
+    arguments (keyword args beyond a constant ``cat=``, f-strings,
+    dicts, any non-constant expression) must be lexically dominated by
+    an ``if tracer.enabled:`` guard, so the disabled path never
+    constructs a single object.  ``tracer.span("literal")`` alone is
+    allocation-free (NULL_TRACER returns a shared singleton) and may go
+    unguarded.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+from ..core import Finding, ParsedModule, dotted_name
+
+_EMIT_METHODS = ("span", "begin", "end", "instant", "counter")
+_NAMED_METHODS = ("span", "begin", "end", "instant")   # checked vs catalog
+_TRACER_NAMES = ("trc", "tracer")
+
+
+def is_tracer_call(node: ast.Call) -> Optional[str]:
+    """The emit-method name when ``node`` is a call on a tracer-like
+    receiver (``trc`` / ``tracer`` locals, ``*.tracer`` attributes,
+    ``get_tracer()``), else None."""
+    fn = node.func
+    if not isinstance(fn, ast.Attribute) or fn.attr not in _EMIT_METHODS:
+        return None
+    recv = fn.value
+    if isinstance(recv, ast.Name) and recv.id in _TRACER_NAMES:
+        return fn.attr
+    if isinstance(recv, ast.Attribute) and recv.attr == "tracer":
+        return fn.attr
+    if isinstance(recv, ast.Call):
+        name = dotted_name(recv.func) or ""
+        if name.split(".")[-1] == "get_tracer":
+            return fn.attr
+    return None
+
+
+def span_name_of(node: ast.Call) -> Tuple[Optional[str], Optional[str]]:
+    """(literal_name, dynamic_prefix) of the call's first positional
+    argument — at most one of the two is non-None."""
+    if not node.args:
+        return None, None
+    arg = node.args[0]
+    if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+        return arg.value, None
+    if isinstance(arg, ast.BinOp) and isinstance(arg.op, ast.Add):
+        left = arg.left
+        if isinstance(left, ast.Constant) and isinstance(left.value, str):
+            return None, left.value
+    if isinstance(arg, ast.JoinedStr) and arg.values:
+        first = arg.values[0]
+        if isinstance(first, ast.Constant) and isinstance(first.value, str):
+            return None, first.value
+    return None, None
+
+
+def _allocates_args(node: ast.Call) -> bool:
+    """Does evaluating this call's arguments build objects (kwargs dict
+    entries beyond a constant ``cat=``, f-strings, containers, calls)?"""
+    for kw in node.keywords:
+        if kw.arg == "cat" and isinstance(kw.value, ast.Constant):
+            continue
+        return True
+    for arg in node.args:
+        if not isinstance(arg, ast.Constant):
+            return True
+    return False
+
+
+def _test_mentions_enabled(test: ast.AST) -> bool:
+    return any(
+        isinstance(n, ast.Attribute) and n.attr == "enabled"
+        for n in ast.walk(test)
+    )
+
+
+def _is_not_enabled(test: ast.AST) -> bool:
+    return (
+        isinstance(test, ast.UnaryOp)
+        and isinstance(test.op, ast.Not)
+        and _test_mentions_enabled(test.operand)
+    )
+
+
+def _terminates(body: List[ast.stmt]) -> bool:
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break)
+    )
+
+
+# span-name sources that may legitimately fall outside the catalog:
+# the tracer implementation itself, and test/fixture trees
+_EXCLUDE_PREFIXES = ("src/repro/obs/", "tests/", "tools/")
+
+
+class TracerDisciplinePass:
+    name = "tracer-discipline"
+    rules = ("trace-unknown-span", "trace-dead-span", "trace-unguarded-args")
+
+    def __init__(self) -> None:
+        self._literals: Set[str] = set()
+        self._prefixes: Set[str] = set()
+
+    def run(self, module: ParsedModule, ctx) -> Iterator[Finding]:
+        if module.path.startswith(_EXCLUDE_PREFIXES):
+            return
+        catalog = ctx.known_spans()
+        # guard analysis needs statement structure: walk function bodies
+        guarded: Dict[int, bool] = {}   # id(call node) -> dominated by guard
+        calls: List[ast.Call] = []
+
+        def scan(stmts: List[ast.stmt], is_guarded: bool) -> None:
+            for stmt in stmts:
+                if isinstance(stmt, ast.If):
+                    collect_exprs(stmt.test, is_guarded)
+                    if _test_mentions_enabled(stmt.test) and not _is_not_enabled(
+                        stmt.test
+                    ):
+                        scan(stmt.body, True)
+                        scan(stmt.orelse, is_guarded)
+                    elif _is_not_enabled(stmt.test):
+                        scan(stmt.body, is_guarded)
+                        scan(stmt.orelse, True)
+                        if _terminates(stmt.body):
+                            is_guarded = True
+                    else:
+                        scan(stmt.body, is_guarded)
+                        scan(stmt.orelse, is_guarded)
+                elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                    collect_exprs(stmt.iter, is_guarded)
+                    scan(stmt.body, is_guarded)
+                    scan(stmt.orelse, is_guarded)
+                elif isinstance(stmt, ast.While):
+                    collect_exprs(stmt.test, is_guarded)
+                    scan(stmt.body, is_guarded)
+                    scan(stmt.orelse, is_guarded)
+                elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                    for item in stmt.items:
+                        collect_exprs(item.context_expr, is_guarded)
+                    scan(stmt.body, is_guarded)
+                elif isinstance(stmt, ast.Try):
+                    scan(stmt.body, is_guarded)
+                    for h in stmt.handlers:
+                        scan(h.body, is_guarded)
+                    scan(stmt.orelse, is_guarded)
+                    scan(stmt.finalbody, is_guarded)
+                elif isinstance(
+                    stmt, (ast.FunctionDef, ast.AsyncFunctionDef)
+                ):
+                    scan(stmt.body, False)
+                elif isinstance(stmt, ast.ClassDef):
+                    scan(stmt.body, False)
+                else:
+                    collect_exprs(stmt, is_guarded)
+
+        def collect_exprs(node: ast.AST, is_guarded: bool) -> None:
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call) and is_tracer_call(sub):
+                    guarded[id(sub)] = is_guarded
+                    calls.append(sub)
+
+        scan(module.tree.body, False)
+
+        for call in calls:
+            method = is_tracer_call(call)
+            assert method is not None
+            if method in _NAMED_METHODS:
+                literal, prefix = span_name_of(call)
+                if literal is not None:
+                    self._literals.add(literal)
+                    if literal not in catalog:
+                        yield module.finding(
+                            "trace-unknown-span", call,
+                            f"span name {literal!r} is not in "
+                            "obs.schema.KNOWN_SPANS; catalog it (or fix "
+                            "the typo)",
+                        )
+                elif prefix is not None:
+                    self._prefixes.add(prefix)
+                    if not any(name.startswith(prefix) for name in catalog):
+                        yield module.finding(
+                            "trace-unknown-span", call,
+                            f"dynamic span name with prefix {prefix!r} "
+                            "matches no obs.schema.KNOWN_SPANS entry",
+                        )
+            if _allocates_args(call) and not guarded.get(id(call), False):
+                yield module.finding(
+                    "trace-unguarded-args", call,
+                    f"tracer.{method}(...) builds arguments outside an "
+                    "`if tracer.enabled:` guard — the NULL_TRACER "
+                    "zero-allocation rule requires the disabled path to "
+                    "construct nothing",
+                )
+
+    def finish(self, ctx) -> Iterable[Finding]:
+        catalog = ctx.known_spans_with_lines()
+        if not catalog:
+            return
+        schema_path = ctx.schema_relpath()
+        # dead-entry containment is only meaningful on a full-repo run —
+        # a partial run (single file, fixture snippet) sees few usages
+        if not any(m.path == schema_path for m in ctx.modules):
+            return
+        for name, lineno in sorted(catalog.items()):
+            if name in self._literals:
+                continue
+            if any(name.startswith(p) for p in self._prefixes):
+                continue
+            yield Finding(
+                rule="trace-dead-span",
+                path=schema_path,
+                line=lineno,
+                col=0,
+                message=(
+                    f"cataloged span {name!r} is emitted by no "
+                    "instrumentation point (dead KNOWN_SPANS entry)"
+                ),
+                snippet=name,
+            )
+
+    # exposed for the static span-catalog test (tests/test_obs.py)
+    @property
+    def literal_names(self) -> Set[str]:
+        return set(self._literals)
+
+    @property
+    def dynamic_prefixes(self) -> Set[str]:
+        return set(self._prefixes)
+
+
+def collect_span_usage(modules) -> Tuple[Set[str], Set[str]]:
+    """(literal span names, dynamic prefixes) used by instrumentation
+    points across ``modules`` — the static half of the span-catalog
+    containment test."""
+    literals: Set[str] = set()
+    prefixes: Set[str] = set()
+    for module in modules:
+        if module.path.startswith(_EXCLUDE_PREFIXES):
+            continue
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            method = is_tracer_call(node)
+            if method not in _NAMED_METHODS:
+                continue
+            literal, prefix = span_name_of(node)
+            if literal is not None:
+                literals.add(literal)
+            elif prefix is not None:
+                prefixes.add(prefix)
+    return literals, prefixes

@@ -1,0 +1,286 @@
+"""repro-lint runner: discovery, context, baseline diff, reporters."""
+
+from __future__ import annotations
+
+import ast
+import json
+import os
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .core import (
+    Finding,
+    ParsedModule,
+    diff_baseline,
+    load_baseline,
+    save_baseline,
+)
+from .passes import ALL_PASSES
+
+DEFAULT_ROOTS = ("src/repro", "benchmarks", "examples", "tools")
+DEFAULT_BASELINE = "tools/lint/baseline.json"
+SCHEMA_RELPATH = "src/repro/obs/schema.py"
+
+
+class LintContext:
+    """Cross-file state handed to every pass (repo root, span catalog)."""
+
+    def __init__(self, root: str, modules: Sequence[ParsedModule]):
+        self.root = root
+        self.modules = list(modules)
+        self._catalog: Optional[Dict[str, int]] = None
+
+    def schema_relpath(self) -> str:
+        return SCHEMA_RELPATH
+
+    def known_spans_with_lines(self) -> Dict[str, int]:
+        """span name -> line number in schema.py, read off the AST of the
+        ``KNOWN_SPANS`` literal (the linter never imports repro)."""
+        if self._catalog is None:
+            self._catalog = _parse_known_spans(
+                os.path.join(self.root, SCHEMA_RELPATH)
+            )
+        return self._catalog
+
+    def known_spans(self) -> frozenset:
+        return frozenset(self.known_spans_with_lines())
+
+
+def _parse_known_spans(schema_path: str) -> Dict[str, int]:
+    try:
+        with open(schema_path) as f:
+            tree = ast.parse(f.read(), filename=schema_path)
+    except (OSError, SyntaxError):
+        return {}
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        else:
+            continue
+        if not any(
+            isinstance(t, ast.Name) and t.id == "KNOWN_SPANS"
+            for t in targets
+        ):
+            continue
+        value = node.value
+        if not isinstance(value, ast.Dict):
+            return {}
+        catalog: Dict[str, int] = {}
+        for group in value.values:
+            if isinstance(group, (ast.Tuple, ast.List)):
+                for elt in group.elts:
+                    if isinstance(elt, ast.Constant) and isinstance(
+                        elt.value, str
+                    ):
+                        catalog[elt.value] = elt.lineno
+        return catalog
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# Discovery
+# ---------------------------------------------------------------------------
+
+
+def discover_files(root: str, roots: Sequence[str] = DEFAULT_ROOTS) -> List[str]:
+    out: List[str] = []
+    for rel in roots:
+        base = os.path.join(root, rel)
+        if os.path.isfile(base) and base.endswith(".py"):
+            out.append(base)
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = sorted(
+                d for d in dirnames
+                if d not in ("__pycache__", ".git", "results")
+            )
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    out.append(os.path.join(dirpath, fn))
+    return out
+
+
+def parse_modules(root: str, paths: Iterable[str]) -> Tuple[
+    List[ParsedModule], List[Finding]
+]:
+    modules: List[ParsedModule] = []
+    errors: List[Finding] = []
+    for path in paths:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        try:
+            with open(path) as f:
+                source = f.read()
+            modules.append(ParsedModule(rel, source, abspath=path))
+        except SyntaxError as e:
+            errors.append(Finding(
+                rule="parse-error", path=rel, line=e.lineno or 1, col=0,
+                message=f"syntax error: {e.msg}", snippet="",
+            ))
+        except OSError as e:
+            errors.append(Finding(
+                rule="parse-error", path=rel, line=1, col=0,
+                message=f"unreadable: {e}", snippet="",
+            ))
+    return modules, errors
+
+
+# ---------------------------------------------------------------------------
+# Lint API
+# ---------------------------------------------------------------------------
+
+
+def run_passes(
+    modules: Sequence[ParsedModule],
+    root: str,
+    passes=ALL_PASSES,
+    rules: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    """All unsuppressed findings, ordered by (path, line, rule)."""
+    ctx = LintContext(root, modules)
+    by_path = {m.path: m for m in modules}
+    findings: List[Finding] = []
+    for pass_cls in passes:
+        p = pass_cls()
+        for module in modules:
+            findings.extend(p.run(module, ctx))
+        findings.extend(p.finish(ctx))
+    kept = []
+    for f in findings:
+        if rules is not None and f.rule not in rules:
+            continue
+        mod = by_path.get(f.path)
+        if mod is not None and mod.is_suppressed(f):
+            continue
+        kept.append(f)
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return kept
+
+
+def lint_source(
+    source: str, path: str = "snippet.py", root: str = ".",
+    passes=ALL_PASSES, rules: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    """Lint one in-memory module (the fixture-test entry point).  ``path``
+    controls which directory-scoped rules apply."""
+    module = ParsedModule(path, source, abspath=os.path.join(root, path))
+    return run_passes([module], root, passes=passes, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Reporters
+# ---------------------------------------------------------------------------
+
+
+def report_human(
+    findings: List[Finding], new: List[Finding], stale: List[str],
+    baseline_count: int, files: int, out=None,
+) -> None:
+    out = out if out is not None else sys.stdout
+    new_ids = {id(f) for f in new}
+    for f in findings:
+        marker = "NEW " if id(f) in new_ids else "base"
+        print(f"{marker} {f.format()}", file=out)
+    for fp in stale:
+        print(f"stale baseline entry (fixed? run --update-baseline): {fp}",
+              file=out)
+    print(
+        f"repro-lint: {files} files, {len(findings)} findings "
+        f"({len(new)} new, {len(findings) - len(new)} baselined of "
+        f"{baseline_count}, {len(stale)} stale)",
+        file=out,
+    )
+
+
+def report_json(
+    findings: List[Finding], new: List[Finding], stale: List[str],
+    files: int, out=None,
+) -> None:
+    out = out if out is not None else sys.stdout
+    new_ids = {id(f) for f in new}
+    payload = {
+        "files": files,
+        "findings": [
+            {
+                "rule": f.rule, "path": f.path, "line": f.line,
+                "col": f.col, "message": f.message,
+                "fingerprint": f.fingerprint,
+                "new": id(f) in new_ids,
+            }
+            for f in findings
+        ],
+        "stale_baseline": stale,
+        "new_count": len(new),
+    }
+    json.dump(payload, out, indent=1)
+    out.write("\n")
+
+
+# ---------------------------------------------------------------------------
+# CLI entry
+# ---------------------------------------------------------------------------
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.lint",
+        description="repro-lint: AST invariant analyzer for determinism, "
+        "tracer discipline, and registry contracts",
+    )
+    ap.add_argument(
+        "paths", nargs="*",
+        help=f"files/dirs to lint (default: {', '.join(DEFAULT_ROOTS)})",
+    )
+    ap.add_argument("--root", default=".", help="repo root (default: cwd)")
+    ap.add_argument(
+        "--format", choices=("human", "json"), default="human",
+    )
+    ap.add_argument(
+        "--baseline", default=DEFAULT_BASELINE,
+        help="baseline file of grandfathered findings (repo-relative)",
+    )
+    ap.add_argument(
+        "--no-baseline", action="store_true",
+        help="ignore the baseline: report every finding as new",
+    )
+    ap.add_argument(
+        "--update-baseline", action="store_true",
+        help="rewrite the baseline with the current findings and exit 0",
+    )
+    ap.add_argument(
+        "--rules", default=None,
+        help="comma-separated rule ids to run (default: all)",
+    )
+    args = ap.parse_args(argv)
+
+    root = os.path.abspath(args.root)
+    roots = tuple(args.paths) if args.paths else DEFAULT_ROOTS
+    files = discover_files(root, roots)
+    modules, errors = parse_modules(root, files)
+    rules = (
+        [r.strip() for r in args.rules.split(",")] if args.rules else None
+    )
+    findings = errors + run_passes(modules, root, rules=rules)
+
+    baseline_path = os.path.join(root, args.baseline)
+    baseline = {} if args.no_baseline else load_baseline(baseline_path)
+    if args.update_baseline:
+        save_baseline(baseline_path, findings)
+        print(
+            f"repro-lint: wrote {len(findings)} findings to "
+            f"{args.baseline}"
+        )
+        return 0
+    new, stale = diff_baseline(findings, baseline)
+    if args.format == "json":
+        report_json(findings, new, stale, files=len(files))
+    else:
+        report_human(
+            findings, new, stale,
+            baseline_count=sum(baseline.values()), files=len(files),
+        )
+    return 1 if new else 0
