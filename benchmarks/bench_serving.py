@@ -1,0 +1,297 @@
+"""Mixed training + serving sweep — the MLaaS serving digital twin
+(ISSUE 10); emits the ``serving`` section of ``BENCH_cluster.json``.
+
+Two latency-SLO inference services (a chat-sized dense model and a small
+low-latency model, diurnal traffic with offset phases and seeded bursts)
+share a 16x16 grid with a Poisson training load and a switch-heavy fault
+trace.  Each operable fabric (``job_network`` capability, the same
+roster as ``bench_chaos``) is run twice on identical event streams:
+
+* **fixed** — ``ServingConfig(autoscale=False)``: the services keep
+  their initial replica counts all day;
+* **autoscale** — the autoscaler sizes each service per rate sample
+  (``ReplicaScale`` through the normal placement + OCS machinery), with
+  serving preemption priority and a headroom reserve on (the SLO policy
+  engine's training-vs-serving trade).
+
+The autoscaler must measurably improve SLO attainment over the fixed
+baseline on the same seed — asserted fatally in ``--smoke`` (CI) and
+recorded per fabric in the full run.  Both modes are run twice for
+replay determinism, and the fault trace must visibly touch serving
+(replica repairs/migrations/evictions) somewhere in the sweep.
+
+  PYTHONPATH=src python benchmarks/bench_serving.py            # full run
+  PYTHONPATH=src python benchmarks/bench_serving.py --smoke    # CI
+
+``--smoke`` runs a shorter horizon and does not rewrite
+BENCH_cluster.json; the full run merges its results under the
+``serving`` key (``bench_cluster.py`` owns ``rows``/``policy_sweep``,
+``bench_chaos.py`` owns ``chaos`` — all preserved symmetrically).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_cluster.json")
+
+SEED = 10_2026
+SIDE = 16
+RATE_INTERVAL_S = 600.0
+
+# switch-heavy fault stream: serving replicas must visibly degrade,
+# repair, and migrate (mtbf tuned so a handful of faults land per run)
+FAULT_KWARGS = dict(
+    mtbf_node_s=0.0, mtbf_switch_s=4.0e5, mttr_switch_s=1800.0,
+)
+
+
+def serving_services():
+    """The two services of the sweep.  Demand peaks near 3x one
+    replica's capacity, so the fixed single-replica baseline saturates
+    through the diurnal peak while the autoscaler tracks it."""
+    import math
+
+    from repro.cluster import DiurnalProfile, make_service
+
+    chat = make_service(
+        0, "qwen3-8b", slo_p99_s=2.0,
+        initial_replicas=1, max_replicas=6,
+    )
+    edge = make_service(
+        1, "llama3.2-3b", slo_p99_s=1.0,
+        initial_replicas=1, max_replicas=6,
+    )
+    profiles = {
+        0: DiurnalProfile(base_rps=20.0),
+        # offset peak (evening vs midday) + stronger half-day harmonic
+        1: DiurnalProfile(base_rps=26.0, harmonics=(
+            (0.5, 86400.0, -math.pi / 4.0),
+            (0.2, 43200.0, math.pi / 2.0),
+        )),
+    }
+    return (chat, edge), profiles
+
+
+def serving_fabrics():
+    """Same operability rule as bench_chaos: a fabric is sweepable iff
+    it registers the ``job_network`` capability."""
+    import bench_chaos
+
+    return bench_chaos.chaos_fabrics()
+
+
+def announce_fabrics():
+    operable, skipped = serving_fabrics()
+    print(f"bench_serving fabrics: {','.join(operable)}")
+    if skipped:
+        print(
+            "bench_serving skipping (no job_network capability): "
+            + ",".join(skipped)
+        )
+    return operable
+
+
+def _events(cfg, duration_s: float, jobs: int):
+    """The shared event stream: training submits + both services'
+    diurnal rate traces + the switch-heavy fault trace."""
+    from repro.cluster import (
+        iter_diurnal_trace,
+        iter_fault_domain_trace,
+        iter_poisson_trace,
+        make_job,
+    )
+
+    _, profiles = serving_services()
+    events = []
+    for sid, profile in sorted(profiles.items()):
+        events.extend(iter_diurnal_trace(
+            service_id=sid, seed=SEED + sid, duration_s=duration_s,
+            interval_s=RATE_INTERVAL_S, profile=profile,
+            burst_prob=0.05,
+        ))
+    # deterministic training mix: identical spacing to bench_chaos, so
+    # serving contends with a realistic tier-0 background load
+    for i in range(jobs):
+        job = make_job(
+            i, "qwen3-8b", service_s=(1.0 + (i % 3)) * 3600.0,
+        )
+        from repro.cluster import JobSubmit
+
+        events.append(JobSubmit(time=i * 300.0, job=job))
+    events.extend(iter_fault_domain_trace(
+        n=SIDE, rails=cfg.r, seed=SEED, duration_s=duration_s,
+        emit_horizon_recoveries=True, **FAULT_KWARGS,
+    ))
+    return events
+
+
+def run_mixed(
+    fabric: str,
+    *,
+    autoscale: bool,
+    duration_s: float,
+    jobs: int = 6,
+):
+    """One mixed training+serving run; returns ``(row, fingerprint)``.
+
+    ``autoscale=True`` also turns on serving preemption priority and a
+    small headroom reserve — the full SLO policy engine; ``False`` is
+    the flags-off fixed-replica baseline."""
+    from repro.cluster import ClusterScheduler, ServingConfig
+    from repro.core.topology import RailXConfig
+
+    cfg = RailXConfig(m=4, n=4, R=2 * SIDE)
+    services, _ = serving_services()
+    sched = ClusterScheduler(
+        cfg, n=SIDE, policy="best_fit", goodput_model="flow",
+        validate_circuits=False, fabric=fabric,
+        checkpoint_interval_s=900.0,
+        serving=ServingConfig(
+            services=services,
+            autoscale=autoscale,
+            preempt_training=autoscale,
+            headroom_nodes=4 if autoscale else 0,
+        ),
+    )
+    t0 = time.perf_counter()
+    m = sched.run(_events(cfg, duration_s, jobs))
+    wall = time.perf_counter() - t0
+    s = m.summary()
+    srv = sched.serving_summary(until=duration_s)
+    row = {
+        "fabric": fabric,
+        "mode": "autoscale" if autoscale else "fixed",
+        "grid": f"{SIDE}x{SIDE}",
+        "events": s["events"],
+        "wall_s": round(wall, 4),
+        "training_finished": s["finished"],
+        "utilization": s["utilization"],
+        "circuits_flipped": s["circuits_flipped"],
+        "slo_attainment": srv["slo_attainment"],
+        "p99_queue_delay_s": srv["p99_queue_delay_s"],
+        "mean_queue_wait_s": srv["mean_queue_wait_s"],
+        "requests": srv["requests"],
+        "replica_scale_events": srv["replica_scale_events"],
+        "scale_ups": srv["scale_ups"],
+        "scale_downs": srv["scale_downs"],
+        "scale_failures": srv["scale_failures"],
+        "serving_preemptions": srv["serving_preemptions"],
+        "serving_repairs": srv["serving_repairs"],
+        "serving_migrations": srv["serving_migrations"],
+        "serving_fault_evictions": srv["serving_fault_evictions"],
+        "services": srv["services"],
+    }
+    fingerprint = json.dumps(
+        {"summary": s, "serving": srv}, sort_keys=True
+    )
+    return row, fingerprint
+
+
+def sweep(duration_s: float, jobs: int):
+    """fixed vs autoscale across the operable fabrics, each mode run
+    twice (replay determinism).  The autoscaler must beat the fixed
+    baseline's SLO attainment on every fabric, and must actually scale."""
+    rows = []
+    for fabric in serving_fabrics()[0]:
+        per = {}
+        for autoscale in (False, True):
+            row, fp1 = run_mixed(
+                fabric, autoscale=autoscale,
+                duration_s=duration_s, jobs=jobs,
+            )
+            _, fp2 = run_mixed(
+                fabric, autoscale=autoscale,
+                duration_s=duration_s, jobs=jobs,
+            )
+            assert fp1 == fp2, (
+                f"{fabric}/autoscale={autoscale}: replay not deterministic"
+            )
+            per[row["mode"]] = row
+            rows.append(row)
+        fixed, auto = per["fixed"], per["autoscale"]
+        assert auto["scale_ups"] > 0, (
+            f"{fabric}: autoscaler never scaled up"
+        )
+        assert auto["slo_attainment"] > fixed["slo_attainment"], (
+            f"{fabric}: autoscale attainment {auto['slo_attainment']}"
+            f" not above fixed {fixed['slo_attainment']}"
+        )
+        print(
+            f"bench_serving_{fabric},{auto['wall_s'] * 1000:.1f},"
+            f"fixed_att={fixed['slo_attainment']};"
+            f"auto_att={auto['slo_attainment']};"
+            f"auto_p99={auto['p99_queue_delay_s']};"
+            f"scale_ups={auto['scale_ups']};"
+            f"scale_downs={auto['scale_downs']};"
+            f"repairs={auto['serving_repairs']};"
+            f"migrations={auto['serving_migrations']};"
+            f"flips={auto['circuits_flipped']}"
+        )
+    # the fault stream must visibly touch serving somewhere in the sweep
+    assert any(
+        r["serving_repairs"] + r["serving_migrations"]
+        + r["serving_fault_evictions"] > 0
+        for r in rows
+    ), "no serving replica was ever degraded, repaired, or migrated"
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="short horizon + assertions for CI; does not write "
+             "BENCH_cluster.json",
+    )
+    ap.add_argument(
+        "--trace", metavar="OUT.json", default=None,
+        help="record a Chrome trace-event JSON of the whole bench "
+             "(open in https://ui.perfetto.dev)",
+    )
+    args = ap.parse_args()
+
+    if args.trace:
+        from repro.obs import Tracer, tracing
+
+        tracer = Tracer(process="bench-serving")
+        with tracing(tracer):
+            _run(args)
+        tracer.write(args.trace)
+        print(f"wrote trace {args.trace}")
+    else:
+        _run(args)
+
+
+def _run(args) -> None:
+    announce_fabrics()
+    if args.smoke:
+        sweep(duration_s=8 * 3600.0, jobs=6)
+        print("smoke ok")
+        return
+
+    rows = sweep(duration_s=24 * 3600.0, jobs=12)
+    data = {}
+    if os.path.exists(OUT):
+        with open(OUT) as f:
+            data = json.load(f)
+    data["serving"] = {
+        "grid": f"{SIDE}x{SIDE}",
+        "seed": SEED,
+        "rate_interval_s": RATE_INTERVAL_S,
+        "fault_kwargs": FAULT_KWARGS,
+        "rows": rows,
+    }
+    with open(OUT, "w") as f:
+        json.dump(data, f, indent=2)
+    print(f"wrote {os.path.relpath(OUT)} (serving section)")
+
+
+if __name__ == "__main__":
+    main()

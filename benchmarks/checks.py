@@ -42,6 +42,7 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 import bench_chaos
 import bench_cluster
+import bench_serving
 import bench_simulator
 
 BENCH_CLUSTER = os.path.join(
@@ -323,6 +324,61 @@ def _chaos_check(
     )
 
 
+def _serving_check(
+    fabric: str, reference: Mapping, *, duration_s: float, jobs: int
+) -> Check:
+    """Replay one ``bench_serving`` fabric in both modes: pin the
+    autoscale run's serving figures byte-exactly and assert the SLO
+    effect invariant (autoscaler above the fixed baseline) as sanity.
+    The traced pass must emit the serving event + policy spans."""
+
+    def run() -> Mapping:
+        fixed, _ = bench_serving.run_mixed(
+            fabric, autoscale=False, duration_s=duration_s, jobs=jobs,
+        )
+        auto, _ = bench_serving.run_mixed(
+            fabric, autoscale=True, duration_s=duration_s, jobs=jobs,
+        )
+        row = {k: v for k, v in auto.items() if k != "services"}
+        row["fixed_slo_attainment"] = fixed["slo_attainment"]
+        row["wall_s"] = round(fixed["wall_s"] + auto["wall_s"], 4)
+        return row
+
+    return Check(
+        name=f"cluster/serving/{fabric}/{duration_s / 3600.0:g}h",
+        run=run,
+        fidelity={k: reference[k] for k in _SERVING_FIDELITY},
+        sanity=(
+            ("autoscaler beat the fixed baseline", lambda r: (
+                r["slo_attainment"] > r["fixed_slo_attainment"]
+            )),
+            ("autoscaler scaled up", lambda r: r["scale_ups"] > 0),
+            ("SLO attainment in [0, 1]", lambda r: (
+                0.0 <= r["slo_attainment"] <= 1.0
+            )),
+            ("queue figures nonnegative", lambda r: (
+                r["p99_queue_delay_s"] >= 0.0
+                and r["mean_queue_wait_s"] >= 0.0
+            )),
+            ("requests arrived", lambda r: r["requests"] > 0),
+        ),
+        ref_wall_s=float(reference["wall_s"]),
+        trace_spans=(
+            "event.RateUpdate", "event.ReplicaScale",
+            "serving.autoscale", "serving.place",
+        ),
+    )
+
+
+_SERVING_FIDELITY = (
+    "events", "training_finished", "utilization", "circuits_flipped",
+    "slo_attainment", "p99_queue_delay_s", "mean_queue_wait_s", "requests",
+    "replica_scale_events", "scale_ups", "scale_downs", "scale_failures",
+    "serving_preemptions", "serving_repairs", "serving_migrations",
+    "serving_fault_evictions", "fixed_slo_attainment",
+)
+
+
 _CHAOS_FIDELITY = (
     "events", "jobs", "finished", "utilization", "mean_goodput",
     "reconfig_rounds", "circuits_flipped", "node_faults", "switch_faults",
@@ -387,6 +443,21 @@ SMOKE_CHAOS_REPLAY = {
     "wall_s": 0.47,
 }
 
+SMOKE_SERVING = {
+    # bench_serving railx-hyperx, 8 h horizon, 6 training jobs: the
+    # autoscale run's figures plus the fixed baseline's attainment
+    "fabric": "railx-hyperx",
+    "events": 306, "training_finished": 6, "utilization": 0.2455,
+    "circuits_flipped": 12964, "slo_attainment": 1.0,
+    "p99_queue_delay_s": 0.0204, "mean_queue_wait_s": 0.001,
+    "requests": 1408937.308, "replica_scale_events": 9,
+    "scale_ups": 13, "scale_downs": 5, "scale_failures": 0,
+    "serving_preemptions": 0, "serving_repairs": 16,
+    "serving_migrations": 0, "serving_fault_evictions": 0,
+    "fixed_slo_attainment": 0.0151,
+    "wall_s": 0.3,
+}
+
 SMOKE_EXACT_RAILX_8 = {
     # matches bench_simulator.SEED_BASELINES[("railx", 8)] bit for bit
     "a2a_flits_per_cycle_chip": float(
@@ -425,6 +496,10 @@ def smoke_table() -> Tuple[Check, ...]:
             duration_s=4 * 3600.0, jobs=8,
             txn=True, partial_migration=True,
         ),
+        _serving_check(
+            "railx-hyperx", SMOKE_SERVING,
+            duration_s=8 * 3600.0, jobs=6,
+        ),
     )
 
 
@@ -449,6 +524,21 @@ def full_table() -> Tuple[Check, ...]:
             circuit_repair=row.get("circuit_repair", True),
             txn=row.get("ocs_txn", False),
             partial_migration=row.get("partial_migration", False),
+        ))
+    serving_rows = bc.get("serving", {}).get("rows", ())
+    fixed_att = {
+        r["fabric"]: r["slo_attainment"]
+        for r in serving_rows if r["mode"] == "fixed"
+    }
+    for row in serving_rows:
+        if row["mode"] != "autoscale":
+            continue
+        ref = {k: v for k, v in row.items() if k != "services"}
+        ref["fixed_slo_attainment"] = fixed_att[row["fabric"]]
+        # the check replays both modes; its wall is the pair's sum
+        ref["wall_s"] = row["wall_s"] * 2.0
+        checks.append(_serving_check(
+            row["fabric"], ref, duration_s=24 * 3600.0, jobs=12,
         ))
     with open(BENCH_SIMULATOR) as f:
         bs = json.load(f)

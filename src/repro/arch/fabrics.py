@@ -259,6 +259,12 @@ def _rail_only_job_network(cfg, mapping, alloc) -> FlowNetwork:
     return build_job_network_rail_only(cfg, mapping, alloc)
 
 
+def _torus3d_job_network(cfg, mapping, alloc) -> FlowNetwork:
+    from ..cluster.metrics import build_job_network_torus3d
+
+    return build_job_network_torus3d(cfg, mapping, alloc)
+
+
 # ---------------------------------------------------------------------------
 # Registrations
 # ---------------------------------------------------------------------------
@@ -336,6 +342,7 @@ TORUS_3D = register(Architecture(
         CostVariant(order=50, build=lambda p: cost_mod.torus_3d(True, prices=p)),
         CostVariant(order=60, build=lambda p: cost_mod.torus_3d(False, prices=p)),
     ),
+    job_network=_torus3d_job_network,
 ))
 
 

@@ -64,6 +64,8 @@ from .events import (
     NodeFail,
     NodeRecover,
     QuarantineRelease,
+    RateUpdate,
+    ReplicaScale,
     SwitchFail,
     SwitchRecover,
 )
@@ -79,6 +81,7 @@ from .jobs import (
     JobMapping,
     JobSpec,
     default_plan,
+    default_serve_plan,
     make_job,
     model_spec_from_config,
     plan_job_mapping,
@@ -109,6 +112,26 @@ from .reconfig import (
     validate_job_reconfig,
 )
 from .scheduler import ClusterScheduler
+from .serving import (
+    InferenceJobSpec,
+    Replica,
+    ServiceModel,
+    ServiceState,
+    ServingConfig,
+    desired_replicas,
+    erlang_c,
+    make_service,
+    mmc_wait_profile,
+    slo_attainment,
+)
+from .serving_traces import (
+    DiurnalProfile,
+    cumulative_requests,
+    diurnal_rate,
+    diurnal_trace,
+    iter_diurnal_trace,
+    mean_diurnal_rate,
+)
 from .trace import (
     AvailabilityRecord,
     dump_availability_records,
@@ -130,11 +153,13 @@ __all__ = [
     "AvailabilityRecord",
     "CircuitShapeCache",
     "ClusterScheduler",
+    "DiurnalProfile",
     "Event",
     "EventQueue",
     "FaultDomain",
     "FlapTracker",
     "GoodputCache",
+    "InferenceJobSpec",
     "JobFinish",
     "JobMapping",
     "JobSpec",
@@ -145,6 +170,12 @@ __all__ = [
     "NodeRecover",
     "QuarantineConfig",
     "QuarantineRelease",
+    "RateUpdate",
+    "Replica",
+    "ReplicaScale",
+    "ServiceModel",
+    "ServiceState",
+    "ServingConfig",
     "SwitchFail",
     "SwitchRecover",
     "OccupancyIndex",
@@ -160,9 +191,15 @@ __all__ = [
     "apply_plan",
     "best_fit",
     "canonical_allocation",
+    "cumulative_requests",
     "default_plan",
+    "default_serve_plan",
+    "desired_replicas",
     "diff_circuits",
+    "diurnal_rate",
+    "diurnal_trace",
     "dump_availability_records",
+    "erlang_c",
     "estimate_goodput",
     "failure_trace",
     "fault_domain_trace",
@@ -172,6 +209,7 @@ __all__ = [
     "generate_weibull_records",
     "get_policy",
     "irreparable_lines",
+    "iter_diurnal_trace",
     "iter_failure_trace",
     "iter_fault_domain_trace",
     "iter_poisson_trace",
@@ -180,11 +218,15 @@ __all__ = [
     "load_availability_records",
     "synthesize_degraded",
     "make_job",
+    "make_service",
+    "mean_diurnal_rate",
+    "mmc_wait_profile",
     "model_spec_from_config",
     "partial_refit",
     "plan_job_mapping",
     "poisson_trace",
     "rail_aware",
+    "slo_attainment",
     "relabel_circuits",
     "replay_availability_trace",
     "replay_trace",

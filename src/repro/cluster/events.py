@@ -116,18 +116,52 @@ class QuarantineRelease:
     link: Optional[LinkId] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class RateUpdate:
+    """One sample of a serving service's request rate (requests/s).
+
+    Emitted by the diurnal trace generator
+    (``serving_traces.iter_diurnal_trace``); the scheduler closes the
+    service's queue-accounting interval at ``time`` using the previous
+    rate, then adopts ``rate_rps`` for the next one.  Ignored when the
+    scheduler has no serving configuration."""
+
+    time: float
+    service_id: int
+    rate_rps: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaScale:
+    """Grow or shrink a serving service to ``target_replicas``.
+
+    Emitted by the autoscaler policy (and, in tests, injectable as a
+    manual scaling action); each added replica goes through the normal
+    placement + OCS patch-plan machinery, each removed replica releases
+    its rectangle and circuits."""
+
+    time: float
+    service_id: int
+    target_replicas: int
+    reason: str = "autoscale"         # "autoscale" | "manual"
+
+
 Event = Union[
     JobSubmit, JobFinish, NodeFail, NodeRecover,
     SwitchFail, SwitchRecover, LinkFail, LinkRecover, QuarantineRelease,
+    RateUpdate, ReplicaScale,
 ]
 
 # same-instant ordering: failures first (they may evict), then finishes and
-# recoveries (they free capacity), then submissions (they consume it)
+# recoveries (they free capacity), then submissions (they consume it).
+# ReplicaScale sits with the capacity events: an autoscaler decision made
+# at t applies before the same-instant training submissions contend for
+# the nodes; RateUpdate rides with submissions (it only samples load).
 _PRIORITY = {
     NodeFail: 0, SwitchFail: 0, LinkFail: 0,
     JobFinish: 1, NodeRecover: 1, SwitchRecover: 1, LinkRecover: 1,
-    QuarantineRelease: 1,
-    JobSubmit: 2,
+    QuarantineRelease: 1, ReplicaScale: 1,
+    JobSubmit: 2, RateUpdate: 2,
 }
 
 

@@ -122,6 +122,28 @@ def default_plan(arch: str) -> ParallelismPlan:
     return ParallelismPlan(tp=4, cp=1, ep=1, dp=4, pp=1)
 
 
+# serving replicas: much smaller footprints than training (latency-bound
+# decode wants a model shard + a couple of data-parallel slices, not a
+# cluster-scale dp sweep), but always >= 2 node-crossing slices so the
+# ServiceModel's rail-bandwidth term is live and degraded circuits bite
+_DEFAULT_SERVE_PLANS: Dict[str, ParallelismPlan] = {
+    "qwen3-8b": ParallelismPlan(tp=8, cp=1, ep=1, dp=2, pp=1),
+    "paper-llama3-moe": ParallelismPlan(tp=8, cp=1, ep=2, dp=2, pp=1),
+    "qwen3-moe-235b-a22b": ParallelismPlan(tp=8, cp=1, ep=4, dp=2, pp=2),
+    "whisper-large-v3": ParallelismPlan(tp=4, cp=1, ep=1, dp=2, pp=1),
+    "llama3.2-3b": ParallelismPlan(tp=4, cp=1, ep=1, dp=2, pp=1),
+    "gemma3-4b": ParallelismPlan(tp=4, cp=1, ep=1, dp=2, pp=1),
+    "granite-20b": ParallelismPlan(tp=8, cp=1, ep=1, dp=2, pp=2),
+}
+
+
+def default_serve_plan(arch: str) -> ParallelismPlan:
+    """Per-replica parallelism for an inference service on ``arch``."""
+    if arch in _DEFAULT_SERVE_PLANS:
+        return _DEFAULT_SERVE_PLANS[arch]
+    return ParallelismPlan(tp=4, cp=1, ep=1, dp=2, pp=1)
+
+
 def make_job(
     job_id: int,
     arch: str,

@@ -123,6 +123,58 @@ def build_job_network_torus(
     return net
 
 
+def build_job_network_torus3d(
+    cfg: RailXConfig, mapping: MappingResult, alloc: JobAllocation
+) -> FlowNetwork:
+    """The same job's rails on a static 3-D torus (TPUv4-class, no OCS).
+
+    Abstraction: the third torus axis folds each dimension subgroup's
+    line into a ``k x ceil(s/k)`` sub-torus (``k = isqrt(s)``), so every
+    member reaches stride-1 neighbors *and* stride-``k`` fold neighbors.
+    The rail trunk splits 2:1 between the in-line ring and the folded
+    axis (a torus node spends its per-dim ports across the extra axis).
+    Subgroups too short to fold (``s`` < 4) keep the plain ring at full
+    trunk width — identical to :func:`build_job_network_torus` there.
+    All-to-all dims still lack Hamiltonian rail rings, but the fold's
+    stride-``k`` chords cut their worst-case detour from ``s/2`` to
+    about ``sqrt(s)`` hops — the 3-D torus sits between the 2-D torus
+    and the reconfigured fabric, which is exactly where §7 places it."""
+    net = FlowNetwork()
+    for phys in ("X", "Y"):
+        lines = alloc.rows if phys == "X" else alloc.cols
+        for spec, groups, (lo, hi) in _spec_groups(mapping, alloc, phys):
+            rails = hi - lo
+            for members in groups:
+                s = len(members)
+                k = math.isqrt(s)
+                fold = k >= 2 and s >= 4
+                ring_cap = rails * (2.0 / 3.0) if fold else float(rails)
+                for i in range(s):
+                    a, b = members[i], members[(i + 1) % s]
+                    if a == b:
+                        continue
+                    for line in lines:
+                        net.add_link(
+                            _vertex(phys, line, a),
+                            _vertex(phys, line, b),
+                            ring_cap,
+                        )
+                if not fold:
+                    continue
+                fold_cap = rails / 3.0
+                for i in range(s):
+                    a, b = members[i], members[(i + k) % s]
+                    if a == b:
+                        continue
+                    for line in lines:
+                        net.add_link(
+                            _vertex(phys, line, a),
+                            _vertex(phys, line, b),
+                            fold_cap,
+                        )
+    return net
+
+
 def build_job_network_rail_only(
     cfg: RailXConfig, mapping: MappingResult, alloc: JobAllocation
 ) -> FlowNetwork:
@@ -405,6 +457,16 @@ class TimelineMetrics:
     txn_retry_strokes: int = 0             # mirror strokes spent on retries
     txn_rollbacks: int = 0                 # retry-exhausted transactions
     txn_rollback_strokes: int = 0          # mirror strokes spent undoing them
+    # serving digital twin (reported via serving_summary(), never
+    # summary(); all zero with serving=None)
+    replica_scale_events: int = 0          # ReplicaScale events applied
+    serving_scale_ups: int = 0             # replicas successfully added
+    serving_scale_downs: int = 0           # replicas removed by scale-down
+    serving_scale_failures: int = 0        # scale-ups that found no room
+    serving_preemptions: int = 0           # training victims of replicas
+    serving_repairs: int = 0               # in-place replica circuit repairs
+    serving_migrations: int = 0            # fault-evicted replicas re-placed
+    serving_fault_evictions: int = 0       # replicas lost to faults (no room)
     circuit_cache_hits: int = 0
     circuit_cache_misses: int = 0
     goodput_cache_hits: int = 0
@@ -510,6 +572,22 @@ class TimelineMetrics:
             "txn_retry_strokes": self.txn_retry_strokes,
             "txn_rollbacks": self.txn_rollbacks,
             "txn_rollback_strokes": self.txn_rollback_strokes,
+        }
+
+    def serving_summary(self) -> Dict[str, object]:
+        """Serving-twin counters (separate from :meth:`summary` for the
+        same reason as :meth:`policy_summary`; the queue/SLO figures live
+        on the scheduler's per-service state, not here)."""
+        self._sync_external()
+        return {
+            "replica_scale_events": self.replica_scale_events,
+            "scale_ups": self.serving_scale_ups,
+            "scale_downs": self.serving_scale_downs,
+            "scale_failures": self.serving_scale_failures,
+            "serving_preemptions": self.serving_preemptions,
+            "serving_repairs": self.serving_repairs,
+            "serving_migrations": self.serving_migrations,
+            "serving_fault_evictions": self.serving_fault_evictions,
         }
 
     def summary(self) -> Dict[str, float]:

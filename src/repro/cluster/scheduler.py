@@ -45,6 +45,21 @@ fail (seeded injection): a retry-exhausted transaction rolls the circuit
 state back to the last consistent set and the job demotes to the next
 rung instead of running on corrupted circuits.
 
+Serving replicas (``serving=ServingConfig(...)``, the MLaaS digital
+twin) traverse the same ladder with serving semantics: rungs 1-2
+(repair in place, and the heal pass after a restore) re-synthesize a
+replica's circuits over the surviving rails and scale the
+``serving.ServiceModel``'s inter-node bandwidth term by the resulting
+rail factor — a partially-migrated or repaired replica decodes slower
+instead of running at degraded goodput, which the per-service M/M/c
+queue turns into queue delay and missed SLOs.  An irreparable fault
+evicts the replica and attempts an immediate full-size re-place (rung
+3, migrate).  Where a training job would *shrink*, a service maps the
+rung to **replica scale-down**: it simply runs one replica short (no
+elastic re-plan — replicas are fixed shapes), and the autoscaler, when
+enabled, re-emits the target count at the next rate sample once
+capacity returns — the serving analog of requeue.
+
 Policy engine (§6.6, §7 MLaaS operation; all off by default, in which
 case scheduling is byte-identical to the plain FIFO scheduler):
 
@@ -65,6 +80,15 @@ case scheduling is byte-identical to the plain FIFO scheduler):
   ``NodeRecover`` frees capacity, shrunken jobs are grown back toward
   their submit-time plan (inverting the shrink ladder, largest step that
   fits first) with remaining work re-compressed by the worker ratio.
+* **serving** (``serving=ServingConfig(...)``) — latency-SLO inference
+  services placed as replicas through the same machinery, driven by
+  ``RateUpdate`` samples from the diurnal trace generator.  The
+  autoscaler (``autoscale=True``) emits ``ReplicaScale`` events sized
+  to the per-replica roofline rate; ``preempt_training=True`` lets a
+  failed replica placement evict strictly-lower-tier training jobs,
+  and ``headroom_nodes`` reserves free nodes that training placements
+  may not consume.  ``serving=None`` (the default) keeps zero serving
+  state and byte-identical scheduling.
 
 Goodput: each placed job's Table-4 traffic is routed through
 ``core.simulator``'s flow model on the job's reconfigured rail network;
@@ -96,6 +120,8 @@ from .events import (
     NodeFail,
     NodeRecover,
     QuarantineRelease,
+    RateUpdate,
+    ReplicaScale,
     SwitchFail,
     SwitchRecover,
 )
@@ -123,6 +149,13 @@ from .reconfig import (
     SwitchPatch,
     TxnConfig,
     _check_port_discipline,
+)
+from .serving import (
+    Replica,
+    ServiceModel,
+    ServiceState,
+    ServingConfig,
+    desired_replicas,
 )
 
 
@@ -255,6 +288,13 @@ def _event_trace_args(ev: Event) -> Dict[str, object]:
             args["node"] = list(ev.link[0])
             args["dim"] = ev.link[1]
             args["rail"] = ev.link[2]
+    elif isinstance(ev, RateUpdate):
+        args["service"] = ev.service_id
+        args["rate_rps"] = ev.rate_rps
+    elif isinstance(ev, ReplicaScale):
+        args["service"] = ev.service_id
+        args["target"] = ev.target_replicas
+        args["reason"] = ev.reason
     return args
 
 
@@ -286,6 +326,7 @@ class ClusterScheduler:
         quarantine: Optional[QuarantineConfig] = None,
         ocs_txn: Optional[TxnConfig] = None,
         partial_migration: bool = False,
+        serving: Optional[ServingConfig] = None,
     ):
         self.cfg = cfg
         self.n = n if n is not None else cfg.nodes_per_side
@@ -384,6 +425,29 @@ class ClusterScheduler:
         # ``recount_occupied_nodes`` for the equivalence tests)
         self._occupied_count = 0
         self._occ_dirty = True
+        # MLaaS serving digital twin (ISSUE 10).  ``serving=None`` (the
+        # default) keeps ``self.services`` empty and every serving hook a
+        # no-op, so flags-off scheduling is byte-identical (fingerprint
+        # tested).  Initial replicas are placed at t=0, before any events.
+        self.serving = serving
+        self.services: Dict[int, ServiceState] = {}
+        self._service_pseudo: Dict[int, JobSpec] = {}
+        self._serving_headroom = (
+            serving.headroom_nodes if serving is not None else 0
+        )
+        if serving is not None:
+            for spec in serving.services:
+                if spec.service_id in self.services:
+                    raise ValueError(f"duplicate service_id {spec.service_id}")
+                st = ServiceState(spec=spec, model=ServiceModel.for_spec(spec))
+                self.services[spec.service_id] = st
+                self._service_pseudo[spec.service_id] = spec.to_job_spec()
+                for _ in range(spec.initial_replicas):
+                    if not self._place_replica(st, 0.0):
+                        st.scale_failures += 1
+                        self.metrics.serving_scale_failures += 1
+                        break
+                st.mark_replicas(0.0)
 
     # -- state helpers ------------------------------------------------------
 
@@ -728,6 +792,12 @@ class ClusterScheduler:
         remaining_work_s: Optional[float],
     ) -> bool:
         self.metrics.placement_attempts += 1
+        if self._serving_headroom > 0:
+            # SLO policy: reserve headroom nodes for serving scale-ups —
+            # a training placement may not eat into the reserve (serving
+            # placements go through _do_place_replica, which skips this)
+            if self._occ.free_count - jmap.nodes < self._serving_headroom:
+                return False
         if jmap.nodes > self.n * self.n:
             return False
         if not self._occ.can_fit(jmap.rows_req, jmap.cols_req):
@@ -1067,10 +1137,11 @@ class ClusterScheduler:
             if ev.node[0] in rj.alloc.rows and ev.node[1] in rj.alloc.cols:
                 victim = rj
                 break
-        if victim is None:
-            return
-        remaining = self._evict(victim, ev.time, lossy=True)
-        self._recover_ladder(victim.job, remaining, ev.time)
+        if victim is not None:
+            remaining = self._evict(victim, ev.time, lossy=True)
+            self._recover_ladder(victim.job, remaining, ev.time)
+        if self.services:
+            self._serving_node_fault(ev)
 
     def _recover_ladder(self, job: JobSpec, remaining: float, t: float) -> None:
         """Migrate -> shrink -> requeue for an already-evicted job (the
@@ -1380,6 +1451,8 @@ class ClusterScheduler:
         )
         for rj in victims:
             self._repair_or_ladder(rj, ev.time)
+        if self.services:
+            self._serving_circuit_fault(ev.time, key, None)
 
     def _handle_link_fail(self, ev: LinkFail) -> None:
         link = ev.link
@@ -1400,6 +1473,8 @@ class ClusterScheduler:
         )
         for rj in victims:
             self._repair_or_ladder(rj, ev.time)
+        if self.services:
+            self._serving_circuit_fault(ev.time, None, link)
 
     def _record_restore(self, entity: object, t: float) -> None:
         since = self._down_since.pop(entity, None)
@@ -1412,6 +1487,8 @@ class ClusterScheduler:
         self._record_restore(("switch", key), t)
         self._occ.touch()
         self._heal_running(t)
+        if self.services:
+            self._heal_replicas(t)
         self._drain_backlog(t)
 
     def _restore_link(self, link: LinkId, t: float) -> None:
@@ -1419,6 +1496,8 @@ class ClusterScheduler:
         self._record_restore(("link", link), t)
         self._occ.touch()
         self._heal_running(t)
+        if self.services:
+            self._heal_replicas(t)
         self._drain_backlog(t)
 
     def _restore_node(self, node: Coord, t: float) -> None:
@@ -1494,6 +1573,304 @@ class ClusterScheduler:
             if ev.link in self.failed_links:
                 self._restore_link(ev.link, ev.time)
 
+    # -- serving (MLaaS digital twin, ISSUE 10) -----------------------------
+
+    def _handle_rate_update(self, ev: RateUpdate) -> None:
+        st = self.services.get(ev.service_id)
+        if st is None:
+            return
+        st.advance_to(ev.time)
+        st.rate_rps = ev.rate_rps
+        if self.serving is None or not self.serving.autoscale:
+            return
+        want = desired_replicas(
+            st.spec, ev.rate_rps, st.healthy_replica_rate(),
+            self.serving.target_utilization,
+        )
+        cur = len(st.replicas)
+        trc = self.tracer
+        if trc.enabled:
+            trc.instant(
+                "serving.autoscale", cat="serving",
+                service=ev.service_id, rate_rps=ev.rate_rps,
+                replicas=cur, desired=want,
+            )
+        if want > cur:
+            st.down_ticks = 0
+            self._queue.push(ReplicaScale(
+                time=ev.time, service_id=ev.service_id, target_replicas=want,
+            ))
+        elif want < cur:
+            # hysteresis: shrink only after scale_down_ticks consecutive
+            # low samples, so a single quiet bin can't thrash the OCS
+            st.down_ticks += 1
+            if st.down_ticks >= self.serving.scale_down_ticks:
+                st.down_ticks = 0
+                self._queue.push(ReplicaScale(
+                    time=ev.time, service_id=ev.service_id,
+                    target_replicas=want,
+                ))
+        else:
+            st.down_ticks = 0
+
+    def _handle_replica_scale(self, ev: ReplicaScale) -> None:
+        st = self.services.get(ev.service_id)
+        if st is None:
+            return
+        st.advance_to(ev.time)
+        target = max(
+            st.spec.min_replicas, min(st.spec.max_replicas, ev.target_replicas)
+        )
+        self.metrics.replica_scale_events += 1
+        freed = False
+        while len(st.replicas) > target:
+            self._remove_replica(st)
+            st.scale_downs += 1
+            self.metrics.serving_scale_downs += 1
+            freed = True
+        while len(st.replicas) < target:
+            if self._place_replica(st, ev.time):
+                st.scale_ups += 1
+                self.metrics.serving_scale_ups += 1
+            elif (
+                self.serving is not None and self.serving.preempt_training
+                and self._preempt_for_replica(st, ev.time)
+            ):
+                st.scale_ups += 1
+                self.metrics.serving_scale_ups += 1
+            else:
+                st.scale_failures += 1
+                self.metrics.serving_scale_failures += 1
+                break
+        st.mark_replicas(ev.time)
+        if freed:
+            self._drain_backlog(ev.time)
+
+    def _place_replica(self, st: ServiceState, t: float) -> bool:
+        jmap = self._solve_mapping(self._service_pseudo[st.spec.service_id])
+        trc = self.tracer
+        if not trc.enabled:
+            return self._do_place_replica(st, jmap)
+        with trc.span(
+            "serving.place", cat="serving",
+            service=st.spec.service_id,
+            rows_req=jmap.rows_req, cols_req=jmap.cols_req,
+        ) as sp:
+            ok = self._do_place_replica(st, jmap)
+            sp.set(placed=ok)
+            return ok
+
+    def _do_place_replica(self, st: ServiceState, jmap: JobMapping) -> bool:
+        """Replica placement through the normal machinery: policy scan,
+        circuit synthesis (degraded over live faults), checked install.
+        Skips the headroom gate — the reserve exists *for* serving."""
+        self.metrics.placement_attempts += 1
+        if jmap.nodes > self.n * self.n:
+            return False
+        if not self._occ.can_fit(jmap.rows_req, jmap.cols_req):
+            return False
+        self.metrics.placement_scans += 1
+        alloc = self._scan_policy(self._occ, jmap)
+        if alloc is None:
+            return False
+        target = self._circuit_cache.target_for(jmap.mapping, alloc)
+        factor = 1.0
+        if self.circuit_repair and (self.failed_switches or self.failed_links):
+            if faults_hit_target(
+                target, self.failed_switches, self.failed_links
+            ):
+                res = synthesize_degraded(
+                    self.cfg, jmap.mapping, alloc,
+                    frozenset(self.failed_switches),
+                    frozenset(self.failed_links),
+                )
+                if res is None:
+                    return False
+                target, factor = res
+        inst = self._install_checked(target)
+        if inst is None:
+            return False
+        self._occ.occupy(alloc.rows, alloc.cols)
+        self._occupied_count += alloc.size
+        self._occ_dirty = True
+        st.replicas.append(Replica(alloc=alloc, circuits=target, factor=factor))
+        return True
+
+    def _remove_replica(self, st: ServiceState) -> None:
+        rep = st.replicas.pop()
+        self._uninstall(rep.circuits)
+        self._occ.release(rep.alloc.rows, rep.alloc.cols)
+        self._occupied_count -= rep.alloc.size
+        self._occ_dirty = True
+
+    def _evict_replica(self, st: ServiceState, idx: int) -> None:
+        rep = st.replicas.pop(idx)
+        self._uninstall(rep.circuits)
+        self._occ.release(rep.alloc.rows, rep.alloc.cols)
+        self._occupied_count -= rep.alloc.size
+        self._occ_dirty = True
+
+    def _preempt_for_replica(self, st: ServiceState, t: float) -> bool:
+        """Serving preemption priority: evict the cheapest strictly-lower
+        -tier training victims, then place the replica in the hole.  No
+        placed assertion — a transactional install can still abort."""
+        pseudo = self._service_pseudo[st.spec.service_id]
+        jmap = self._solve_mapping(pseudo)
+        victims = self.select_victims(pseudo, t, jmap=jmap)
+        if victims is None:
+            return False
+        for rj in victims:
+            remaining = self._evict(rj, t)
+            rec = self.metrics.records[rj.job.job_id]
+            rec.preemptions += 1
+            self.metrics.preemptions += 1
+            self.metrics.serving_preemptions += 1
+            st.preemptions += 1
+            self.backlog.push_front(
+                dataclasses.replace(rj.job, service_s=remaining)
+            )
+            self._backlog_seen.pop(rj.job.job_id, None)
+        placed = self._place_replica(st, t)
+        self._drain_backlog(t)
+        return placed
+
+    def _serving_circuit_fault(
+        self, t: float, key: Optional[SwitchKey], link: Optional[LinkId]
+    ) -> None:
+        """Switch/link fault entry for replicas: each hit replica walks
+        the same repair -> migrate -> evict ladder as a training job."""
+        for sid in sorted(self.services):
+            st = self.services[sid]
+            hit = [
+                i for i, rep in enumerate(st.replicas)
+                if (key is not None and key in rep.circuits)
+                or (link is not None and link_hits_circuits(link, rep.circuits))
+            ]
+            if not hit:
+                continue
+            st.advance_to(t)
+            for i in reversed(hit):
+                self._repair_or_evict_replica(st, i, t)
+            st.mark_replicas(t)
+
+    def _repair_or_evict_replica(self, st: ServiceState, idx: int, t: float) -> None:
+        rep = st.replicas[idx]
+        jmap = self._solve_mapping(self._service_pseudo[st.spec.service_id])
+        if self.circuit_repair:
+            res = synthesize_degraded(
+                self.cfg, jmap.mapping, rep.alloc,
+                frozenset(self.failed_switches),
+                frozenset(self.failed_links),
+            )
+            if res is not None:
+                new_target, factor = res
+                if self.validate_circuits:
+                    _check_port_discipline(self.cfg, new_target)
+                downtime = self._repatch(rep, new_target)
+                if downtime is not None:
+                    # rung 1: repaired in place; the surviving-rail factor
+                    # scales the ServiceModel's inter-node bandwidth term
+                    rep.factor = factor
+                    st.repairs += 1
+                    self.metrics.serving_repairs += 1
+                    return
+        # irreparable (or txn aborted): evict and try an immediate re-place
+        self._evict_replica(st, idx)
+        if self._place_replica(st, t):
+            st.migrations += 1
+            self.metrics.serving_migrations += 1
+        else:
+            st.fault_evictions += 1
+            self.metrics.serving_fault_evictions += 1
+
+    def _serving_node_fault(self, ev: NodeFail) -> None:
+        for sid in sorted(self.services):
+            st = self.services[sid]
+            for i, rep in enumerate(st.replicas):
+                if ev.node[0] in rep.alloc.rows and ev.node[1] in rep.alloc.cols:
+                    st.advance_to(ev.time)
+                    self._evict_replica(st, i)
+                    if self._place_replica(st, ev.time):
+                        st.migrations += 1
+                        self.metrics.serving_migrations += 1
+                    else:
+                        st.fault_evictions += 1
+                        self.metrics.serving_fault_evictions += 1
+                    st.mark_replicas(ev.time)
+                    break
+
+    def _heal_replicas(self, t: float) -> None:
+        """After a restore, re-synthesize degraded replicas over the
+        smaller fault set (the serving analog of ``_heal_running``)."""
+        if not self.circuit_repair:
+            return
+        for sid in sorted(self.services):
+            st = self.services[sid]
+            touched = False
+            for rep in st.replicas:
+                if rep.factor >= 1.0:
+                    continue
+                jmap = self._solve_mapping(
+                    self._service_pseudo[st.spec.service_id]
+                )
+                res = synthesize_degraded(
+                    self.cfg, jmap.mapping, rep.alloc,
+                    frozenset(self.failed_switches),
+                    frozenset(self.failed_links),
+                )
+                if res is None:
+                    continue
+                new_target, factor = res
+                if new_target == rep.circuits and factor == rep.factor:
+                    continue
+                if not touched:
+                    st.advance_to(t)
+                    touched = True
+                downtime = self._repatch(rep, new_target)
+                if downtime is None:
+                    continue
+                rep.factor = factor
+                st.repairs += 1
+                self.metrics.serving_repairs += 1
+
+    def serving_summary(
+        self, until: Optional[float] = None
+    ) -> Dict[str, object]:
+        """Per-service + aggregate serving figures (``until`` closes the
+        open accounting interval first, like ``run(until=...)`` callers
+        expect)."""
+        per: Dict[str, object] = {}
+        total_req = 0.0
+        total_att = 0.0
+        total_wait = 0.0
+        total_p99 = 0.0
+        total_stable = 0.0
+        for sid in sorted(self.services):
+            st = self.services[sid]
+            if until is not None:
+                st.advance_to(until)
+            per[str(sid)] = st.summary()
+            total_req += st.requests
+            total_att += st.attained
+            total_wait += st.wait_request_s
+            total_p99 += st.p99_s_weighted
+            total_stable += st.stable_s
+        out: Dict[str, object] = {
+            "services": per,
+            "slo_attainment": round(
+                total_att / total_req, 4
+            ) if total_req > 0 else 1.0,
+            "mean_queue_wait_s": round(
+                total_wait / total_req, 4
+            ) if total_req > 0 else 0.0,
+            "p99_queue_delay_s": round(
+                total_p99 / total_stable, 4
+            ) if total_stable > 0 else 0.0,
+            "requests": round(total_req, 3),
+        }
+        out.update(self.metrics.serving_summary())
+        return out
+
     # -- event loop ---------------------------------------------------------
 
     def _dispatch(self, ev: Event) -> None:
@@ -1536,6 +1913,10 @@ class ClusterScheduler:
             self._handle_link_recover(ev)
         elif isinstance(ev, QuarantineRelease):
             self._handle_quarantine_release(ev)
+        elif isinstance(ev, RateUpdate):
+            self._handle_rate_update(ev)
+        elif isinstance(ev, ReplicaScale):
+            self._handle_replica_scale(ev)
         else:  # pragma: no cover
             raise TypeError(f"unknown event {ev!r}")
 

@@ -285,7 +285,15 @@ def _fusion_traffic(
 
 
 def analyze_hlo(text: str, default_trip: int = 1) -> HLOStats:
-    comps = parse_hlo(text)
+    from ..obs import get_tracer
+
+    trc = get_tracer()
+    if trc.enabled:
+        with trc.span("roofline.parse", cat="launch", hlo_bytes=len(text)) as sp:
+            comps = parse_hlo(text)
+            sp.set(computations=len(comps))
+    else:
+        comps = parse_hlo(text)
     entry = None
     for name in comps:
         if name in ("main", "main.0") or name.startswith("main"):

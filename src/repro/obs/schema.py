@@ -33,9 +33,22 @@ KNOWN_SPANS: Dict[str, Tuple[str, ...]] = {
         "event.LinkFail",
         "event.LinkRecover",
         "event.QuarantineRelease",
+        "event.RateUpdate",
+        "event.ReplicaScale",
         "placement.attempt",
         "backlog.drain",
         "preempt.select",
+    ),
+    "serving": (
+        "serving.autoscale",     # autoscaler decision on a rate sample
+        "serving.place",         # replica placement attempt
+    ),
+    "serve": (
+        "serve.prefill",         # one prefill launch (serve_step)
+        "serve.decode_step",     # one decode step launch (serve_step)
+    ),
+    "launch": (
+        "roofline.parse",        # HLO text parse inside analyze_hlo
     ),
     "ocs": (
         "ocs.apply",

@@ -212,6 +212,13 @@ class Tracer:
     def instant(self, name: str, cat: str = "repro", **args) -> None:
         tid, _ = self._thread_state()
         with self._lock:
+            # instants join the phase aggregate at zero duration so
+            # presence checks (checks.py trace_spans) see them uniformly
+            phase = self._phase.get(name)
+            if phase is None:
+                self._phase[name] = [1, 0.0]
+            else:
+                phase[0] += 1
             self.events.append({
                 "name": name, "cat": cat, "ph": "i", "ts": self._ts(),
                 "pid": 1, "tid": tid, "s": "t", "args": args,
@@ -228,12 +235,14 @@ class Tracer:
     # -- aggregation / output -----------------------------------------------
 
     def span_names(self) -> set:
-        """Names of all spans that have closed at least once."""
+        """Names of all spans that have closed at least once (plus any
+        emitted instants)."""
         return set(self._phase)
 
     def phase_totals(self) -> Dict[str, Dict[str, float]]:
         """Per-phase wall-time aggregate: span name -> {count, total_s,
-        mean_us}.  This is the perf-band harness's per-phase signal."""
+        mean_us}.  Instants count with zero duration.  This is the
+        perf-band harness's per-phase signal."""
         return {
             name: {
                 "count": int(cnt),

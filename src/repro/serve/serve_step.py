@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..models.model_zoo import ModelZoo
+from ..obs import get_tracer
 from ..parallel.sharding import logical_spec_tree, make_rules, use_rules
 from ..train.train_step import batch_specs_tree
 
@@ -63,7 +64,7 @@ def make_serve_step(
             logits, new_cache = zoo.decode_step(params, cache, batch)
         return logits, new_cache
 
-    decode_fn = jax.jit(
+    jit_decode = jax.jit(
         decode,
         in_shardings=(param_sharding, cache_sharding, batch_sharding),
         out_shardings=(None, cache_sharding),
@@ -75,7 +76,24 @@ def make_serve_step(
             logits, _ = zoo.forward(params, batch)
         return logits
 
-    prefill_fn = jax.jit(prefill, in_shardings=(param_sharding, batch_sharding))
+    jit_prefill = jax.jit(prefill, in_shardings=(param_sharding, batch_sharding))
+
+    # thin host-side wrappers: spans inside the jitted bodies would only
+    # fire at trace time, so the launches are what gets instrumented
+    def decode_fn(params, cache, batch):
+        trc = get_tracer()
+        if not trc.enabled:
+            return jit_decode(params, cache, batch)
+        with trc.span("serve.decode_step", cat="serve"):
+            return jit_decode(params, cache, batch)
+
+    def prefill_fn(params, batch):
+        trc = get_tracer()
+        if not trc.enabled:
+            return jit_prefill(params, batch)
+        with trc.span("serve.prefill", cat="serve"):
+            return jit_prefill(params, batch)
+
     return ServeArtifacts(decode_fn, prefill_fn, param_sharding, cache_sharding, rules)
 
 
